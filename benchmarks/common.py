@@ -1,0 +1,25 @@
+"""Shared benchmark-table helpers: every figure emits rows of CSV."""
+from __future__ import annotations
+
+import io
+import time
+from typing import Iterable, List, Sequence
+
+
+def csv_table(header: Sequence[str], rows: Iterable[Sequence]) -> str:
+    buf = io.StringIO()
+    buf.write(",".join(map(str, header)) + "\n")
+    for r in rows:
+        buf.write(",".join(
+            f"{x:.4g}" if isinstance(x, float) else str(x) for x in r) + "\n")
+    return buf.getvalue()
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """(result, us_per_call) for the kernel micro-benches."""
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6

@@ -1,0 +1,35 @@
+"""Fig. 12: full-system speedup vs far-memory latency on NH-G.
+
+Paper: CoroAMU-Full averages 3.39x @200ns and 4.87x @800ns over serial
+(up to 29.0x / 59.8x on GUPS). CoroAMU-S is labeled at its best coroutine
+count; -D/-Full run 96 coroutines.
+"""
+from __future__ import annotations
+
+from repro.core import sim
+from benchmarks.common import csv_table
+
+LATENCIES = (100, 200, 400, 800)
+
+
+def rows():
+    out = []
+    for lat in LATENCIES:
+        for variant in ("coroamu-s", "coroamu-d", "coroamu-full"):
+            per = {}
+            for name, b in sim.BENCHES.items():
+                n = (sim.best_coros(variant, b, latency_ns=lat)
+                     if variant == "coroamu-s" else 96)
+                per[name] = sim.speedup(variant, b, latency_ns=lat, n_coros=n)
+            out.append([lat, variant,
+                        *(round(per[n], 2) for n in sim.BENCHES),
+                        round(sim.geomean(list(per.values())), 2)])
+    return out
+
+
+def table() -> str:
+    return csv_table(["latency_ns", "variant", *sim.BENCHES, "geomean"], rows())
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: shape sweeps in interpret mode + coalescing stats.
+
+Interpret-mode wall time is NOT TPU performance (the kernels target TPU; this
+container is CPU) — the derived columns that matter are correctness vs the
+oracle, the coalescing ratio (requests saved, paper §III-C), and the
+latency-aware depth the scheduler solves (paper §III-D analogue).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_table, timed
+from repro.core.descriptors import plan_gather
+from repro.core.schedule import TileProfile, solve_depth, achieved_bandwidth
+from repro.kernels.coro_gather.ops import coro_gather
+from repro.kernels.coro_gather.ref import gather_ref
+from repro.kernels.stream_copy.ops import stream_triad
+from repro.kernels.stream_copy.ref import triad_ref
+
+
+def gather_rows():
+    rng = np.random.RandomState(0)
+    out = []
+    for n_rows, d, n_idx in ((512, 128, 256), (2048, 256, 512)):
+        table = jnp.asarray(rng.randn(n_rows, d), jnp.float32)
+        idx = jnp.asarray(rng.randint(0, n_rows, n_idx), jnp.int32)
+        res, us = timed(coro_gather, table, idx, repeats=1)
+        ok = bool(jnp.allclose(res, gather_ref(table, idx)))
+        out.append(["coro_gather", f"{n_rows}x{d}/{n_idx}", round(us, 1), ok])
+    return out
+
+
+def coalesce_rows():
+    rng = np.random.RandomState(1)
+    out = []
+    patterns = {
+        "gups_random": rng.randint(0, 4096, 512),
+        "stream_unit": np.arange(512),
+        "hj_mixed": np.concatenate([np.arange(100, 300),
+                                    rng.randint(0, 4096, 312)]),
+    }
+    for name, idx in patterns.items():
+        plan = plan_gather(idx, span=8)
+        out.append(["coalesce", name, plan.n_requests,
+                    plan.requests_issued(), round(plan.coalescing_ratio(), 3)])
+    return out
+
+
+def schedule_rows():
+    out = []
+    for tag, tile_bytes, flops in (("gather_row", 8 * 2048 * 4, 64 * 8),
+                                   ("kv_block", 2 * 128 * 8 * 128 * 2, 4 * 128 * 96 * 128),
+                                   ("stream_tile", 2 * 128 * 512 * 4, 128 * 512)):
+        p = TileProfile(tile_bytes=tile_bytes, flops_per_tile=float(flops))
+        d = solve_depth(p)
+        bw = achieved_bandwidth(p, d) / 1e9
+        bw2 = achieved_bandwidth(p, 2) / 1e9
+        out.append(["depth_solver", tag, d, round(bw, 1), round(bw2, 1)])
+    return out
+
+
+def triad_rows():
+    rng = np.random.RandomState(2)
+    b = jnp.asarray(rng.randn(1024, 64), jnp.float32)
+    c = jnp.asarray(rng.randn(1024, 64), jnp.float32)
+    res, us = timed(stream_triad, b, c, 2.5, repeats=1)
+    ok = bool(jnp.allclose(res, triad_ref(b, c, 2.5), rtol=1e-5))
+    return [["stream_triad", "1024x64", round(us, 1), ok]]
+
+
+def table() -> str:
+    s = csv_table(["kernel", "shape", "us_per_call", "allclose"],
+                  gather_rows() + triad_rows())
+    s += csv_table(["pass", "pattern", "requests", "issued", "ratio"],
+                   coalesce_rows())
+    s += csv_table(["pass", "tile", "depth", "GBps_at_depth", "GBps_at_2"],
+                   schedule_rows())
+    return s
+
+
+if __name__ == "__main__":
+    print(table())

@@ -1,0 +1,67 @@
+"""Benchmark harness: one table per paper figure + kernel bench + roofline.
+
+Prints ``name,us_per_call,derived`` CSV summary lines followed by each full
+table. Figure tables come from the calibrated performance model
+(repro.core.sim — see DESIGN.md §2.2); the roofline table reads the
+multi-pod dry-run artifacts if present.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import (  # noqa: E402
+    fig11_compiler,
+    fig12_latency,
+    fig13_instructions,
+    fig14_breakdown,
+    fig15_optimizations,
+    fig16_mlp,
+    kernel_bench,
+    roofline,
+)
+from repro.core import sim  # noqa: E402
+
+
+def main() -> None:
+    sections = [
+        ("fig11_compiler_x86", fig11_compiler.table),
+        ("fig12_latency_speedup", fig12_latency.table),
+        ("fig13_instruction_expansion", fig13_instructions.table),
+        ("fig14_cycle_breakdown", fig14_breakdown.table),
+        ("fig15_compiler_opts", fig15_optimizations.table),
+        ("fig16_mlp", fig16_mlp.table),
+        ("kernel_bench", kernel_bench.table),
+        ("roofline", roofline.table),
+    ]
+    print("name,us_per_call,derived")
+    bodies = []
+    for name, fn in sections:
+        t0 = time.perf_counter()
+        try:
+            body = fn()
+            derived = f"rows={body.count(chr(10)) - 1}"
+        except Exception as e:  # keep the harness running
+            body = f"ERROR: {e!r}\n"
+            derived = "error"
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}")
+        bodies.append((name, body))
+
+    # headline reproduction summary
+    f200 = sim.average_speedup("coroamu-full", latency_ns=200)
+    f800 = sim.average_speedup("coroamu-full", latency_ns=800)
+    g = sim.BENCHES["GUPS"]
+    print(f"headline,0,full@200={f200:.2f}x(paper3.39) full@800={f800:.2f}x(paper4.87) "
+          f"GUPS@800={sim.speedup('coroamu-full', g, latency_ns=800):.1f}x(paper59.8)")
+
+    for name, body in bodies:
+        print(f"\n== {name} ==")
+        print(body, end="")
+
+
+if __name__ == "__main__":
+    main()

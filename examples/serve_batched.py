@@ -1,0 +1,24 @@
+"""Batched serving: prefill a batch of prompts, then decode with KV caches —
+including a sliding-window (hymba) and an SSM (mamba2) arch to show the three
+cache families (full flash-decode / ring / recurrent state).
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config
+from repro.launch.serve import serve
+
+
+def main():
+    for arch in ("yi-6b", "hymba-1.5b", "mamba2-130m"):
+        cfg = get_config(arch).reduced()
+        stats = serve(cfg, batch=4, prompt_len=48, gen=12)
+        print(f"{arch:15s} {stats}")
+
+
+if __name__ == "__main__":
+    main()

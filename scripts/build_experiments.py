@@ -1,0 +1,94 @@
+"""Regenerate EXPERIMENTS.md §Dry-run and §Roofline tables from reports/dryrun."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import ALL_ARCH_NAMES, ALL_SHAPE_NAMES  # noqa: E402
+
+ROOT = Path(__file__).resolve().parent.parent
+RPT = ROOT / "reports" / "dryrun"
+
+
+def load():
+    recs = {}
+    for p in RPT.glob("*.json"):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | single 16×16 | multi 2×16×16 | args GiB/dev | temp GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ALL_ARCH_NAMES:
+        for s in ALL_SHAPE_NAMES:
+            r1 = recs.get((a, s, "single"))
+            r2 = recs.get((a, s, "multi"))
+            if r1 is None:
+                continue
+            if r1["status"] == "skipped":
+                lines.append(f"| {a} | {s} | SKIP | SKIP | — | — | — |"
+                             f" <!-- {r1['reason'][:60]} -->")
+                continue
+            st1 = "✅ ok" if r1["status"] == "ok" else "❌"
+            st2 = "✅ ok" if (r2 or {}).get("status") == "ok" else "❌"
+            mem = r1.get("memory", {})
+            lines.append(
+                f"| {a} | {s} | {st1} | {st2} | "
+                f"{mem.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+                f"{mem.get('temp_size_in_bytes', 0)/2**30:.2f} | "
+                f"{r1.get('compile_s', 0)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ALL_ARCH_NAMES:
+        for s in ALL_SHAPE_NAMES:
+            r = recs.get((a, s, "single"))
+            if r is None or r["status"] != "ok":
+                if r is not None and r["status"] == "skipped":
+                    lines.append(f"| {a} | {s} | — | — | — | skipped | — |")
+                continue
+            t = r["terms"]
+            lines.append(
+                f"| {a} | {s} | {fmt_e(t['compute_s'])} | {fmt_e(t['memory_s'])} | "
+                f"{fmt_e(t['collective_s'])} | **{r['dominant'].replace('_s','')}** | "
+                f"{r['useful_flops_ratio']:.3f} |")
+    return "\n".join(lines)
+
+
+def replace_section(text, marker, body):
+    """Idempotent: replaces marker..<!-- END --> with fresh content."""
+    assert marker in text, marker
+    i = text.index(marker)
+    end = "<!-- END -->"
+    j = text.index(end, i) + len(end)
+    return text[:i] + marker + "\n\n" + body + "\n" + end + text[j:]
+
+
+def main():
+    recs = load()
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+    # strip anything previously inserted after the markers up to next header
+    exp = replace_section(exp, "<!-- DRYRUN_TABLE -->", dryrun_table(recs))
+    exp = replace_section(exp, "<!-- ROOFLINE_TABLE -->", roofline_table(recs))
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+    print(f"tables written: {n_ok} ok cells, {n_skip} skips")
+
+
+if __name__ == "__main__":
+    main()

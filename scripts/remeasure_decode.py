@@ -1,0 +1,31 @@
+"""Re-measure decode/long cells with exact full-depth unrolled compiles."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import ALL_ARCH_NAMES, SHAPES, cell_supported, get_config
+from repro.launch.dryrun import run_cell
+
+
+def main():
+    for arch in ALL_ARCH_NAMES:
+        for shape in ("decode_32k", "long_500k"):
+            if not cell_supported(get_config(arch), SHAPES[shape])[0]:
+                continue
+            try:
+                rec = run_cell(arch, shape, "single", out_dir="reports/dryrun",
+                               verbose=False, full_unroll=True)
+                print(arch, shape, "ok", f"{rec['hlo_flops_per_chip']:.3e}",
+                      rec["dominant"], flush=True)
+            except Exception as e:  # keep sweeping
+                print(arch, shape, "ERROR", repr(e), flush=True)
+    print("DONE", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""CoroAMU on TPU: memory-driven coroutines as decoupled DMA pipelines.
+
+Public API surface:
+  repro.configs     - ArchConfig registry (--arch ids) + shape suites
+  repro.models      - build_model(cfg, ctx): loss / prefill / decode_step
+  repro.core        - the paper's contribution (coro engine, coalescing,
+                      context classes, depth solver, evaluation model)
+  repro.kernels     - Pallas TPU kernels (+ ops wrappers + jnp oracles)
+  repro.runtime     - steps, layouts, train loop, fault tolerance
+  repro.launch      - mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,119 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout: <dir>/step_<n>/ {meta.json, arrays.npz} committed via tmp-dir rename
+(a partially written checkpoint is never visible). `save_async` runs the
+serialization off-thread so the train loop keeps stepping. On restore, arrays
+are placed with whatever shardings the *new* mesh prescribes — world-size
+changes (elastic restart after node loss) just re-shard the same logical
+arrays.
+
+In a real multi-host deployment each process writes its address-able shards
+and meta.json carries the global shape/sharding index; in this single-
+controller container the full logical arrays are written.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(state):
+    leaves, treedef = jax.tree.flatten(state)
+    return leaves, treedef
+
+
+def save(state, ckpt_dir, step: int, *, keep: int = 3) -> Path:
+    """Blocking atomic save. Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp_step_{step}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = _flatten(state)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    meta = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "time": time.time(),
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    final = ckpt_dir / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves; at most one in flight (newer preempts queueing)."""
+
+    def __init__(self, ckpt_dir, *, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save_async(self, state, step: int):
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # snapshot before mutation
+
+        def work():
+            save(host_state, self.ckpt_dir, step, keep=self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir, template, *, step: Optional[int] = None,
+            shardings=None) -> Any:
+    """Restore into `template`'s tree structure; re-shard for the current mesh.
+
+    `shardings` (optional pytree of NamedSharding matching the template)
+    re-lays arrays out on a possibly different mesh — elastic restart.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    data = np.load(d / "arrays.npz")
+    leaves, treedef = _flatten(template)
+    assert len(leaves) == len(data.files), "leaf count mismatch (arch changed?)"
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    state = jax.tree.unflatten(treedef, new_leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            state, shardings,
+        )
+    return state
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(ckpt_dir.glob("step_*"))
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)

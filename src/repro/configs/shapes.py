@@ -1,0 +1,99 @@
+"""Shape suites assigned to the LM family, plus abstract input specs.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input of the step function that the (arch x shape) cell lowers:
+
+  * train_4k     -> train_step(state, batch)        batch = {tokens, targets [, frames/patches]}
+  * prefill_32k  -> prefill_step(params, batch)     one-shot prefill building the KV cache
+  * decode_32k   -> decode_step(params, cache, batch)  one new token against a seq_len cache
+  * long_500k    -> decode_step (sub-quadratic archs only)
+
+No device allocation happens here — weak-type-correct, shardable stand-ins only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSuite("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSuite("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSuite("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeSuite) -> Tuple[bool, str]:
+    """Whether this (arch x shape) cell is defined, and why not if skipped."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, (
+            "long_500k needs sub-quadratic attention; "
+            f"{arch.name} is pure full-attention (skip per spec, see DESIGN.md)"
+        )
+    return True, ""
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_split(arch: ArchConfig, seq_len: int) -> Tuple[int, int]:
+    """(frontend_positions, text_positions) for stub-frontend archs."""
+    if arch.enc_dec:
+        return seq_len, max(seq_len // arch.dec_ratio, 8)
+    if arch.vlm:
+        prefix = min(arch.prefix_len, seq_len // 2)
+        return prefix, seq_len - prefix
+    return 0, seq_len
+
+
+def batch_specs(arch: ArchConfig, shape: ShapeSuite) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for a full forward over `seq_len` (train / prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(arch.dtype)
+    front, text = token_split(arch, s)
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": _f((b, text), jnp.int32),
+        "targets": _f((b, text), jnp.int32),
+        "positions": _f((b, text), jnp.int32),
+    }
+    if arch.enc_dec:
+        # Stub conv frontend: precomputed frame embeddings.
+        specs["frames"] = _f((b, front, arch.d_model), dt)
+    elif arch.vlm:
+        # Stub SigLIP frontend: precomputed patch embeddings.
+        specs["patches"] = _f((b, front, arch.d_model), dt)
+    return specs
+
+
+def decode_batch_specs(arch: ArchConfig, shape: ShapeSuite) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one decode step (one new token per sequence)."""
+    b = shape.global_batch
+    return {
+        "tokens": _f((b, 1), jnp.int32),
+        "positions": _f((b, 1), jnp.int32),
+    }
+
+
+def cache_seq_len(arch: ArchConfig, shape: ShapeSuite) -> int:
+    """Per-layer attention KV length held by the decode cache."""
+    if arch.sliding_window:
+        return min(arch.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+ALL_SHAPE_NAMES = tuple(SHAPES)

@@ -1,0 +1,87 @@
+"""Context minimization (CoroAMU §III-B) as a compile-time classifier.
+
+The paper classifies each loop variable by how it is updated across
+suspension points:
+
+  private    - updated from its own iteration only; must live in the
+               per-coroutine context (here: per-slot VMEM scratch x depth)
+  shared     - read-only, or commutative updates (order-independent
+               accumulation); lives once, outside any slot
+  sequential - order-dependent updates; serialized into the loop carry
+               (executed at coroutine launch/retire, never concurrent)
+
+On TPU the "context" is the VMEM working set of the pipeline: private
+variables multiply by `depth`, shared ones do not — so this classification
+directly sizes the kernel scratch and bounds the reachable pipeline depth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+class VarClass(enum.Enum):
+    PRIVATE = "private"
+    SHARED = "shared"
+    SEQUENTIAL = "sequential"
+
+
+@dataclasses.dataclass(frozen=True)
+class VarSpec:
+    """A value live across a suspension point."""
+
+    name: str
+    nbytes: int
+    read_only: bool = False
+    # update depends on the variable's previous value?
+    carries_dependence: bool = False
+    # if it does: is the combining op commutative+associative (add/min/max)?
+    commutative: bool = False
+    # programmer hint overriding the analysis (paper: pragma shared_var)
+    hint: Optional[VarClass] = None
+
+
+def classify(v: VarSpec) -> VarClass:
+    """The paper's three-way classification (§III-B)."""
+    if v.hint is not None:
+        return v.hint
+    if v.read_only:
+        return VarClass.SHARED
+    if not v.carries_dependence:
+        return VarClass.PRIVATE
+    if v.commutative:
+        return VarClass.SHARED  # order-free reduction: share one accumulator
+    return VarClass.SEQUENTIAL
+
+
+def classify_all(vs: Iterable[VarSpec]) -> Dict[str, VarClass]:
+    return {v.name: classify(v) for v in vs}
+
+
+def context_bytes(vs: Iterable[VarSpec], depth: int,
+                  *, baseline: bool = False) -> int:
+    """VMEM bytes of the pipeline context at a given depth.
+
+    baseline=True models a conventional coroutine frame (everything private,
+    as C++20 codegen would allocate) — the paper's Fig. 15 comparison point.
+    """
+    total = 0
+    for v in vs:
+        cls = VarClass.PRIVATE if baseline else classify(v)
+        total += v.nbytes * (depth if cls is VarClass.PRIVATE else 1)
+    return total
+
+
+def max_depth(vs: Iterable[VarSpec], vmem_budget: int,
+              *, baseline: bool = False) -> int:
+    """Largest pipeline depth whose context fits the VMEM budget."""
+    vs = list(vs)
+    shared = sum(v.nbytes for v in vs
+                 if not baseline and classify(v) is not VarClass.PRIVATE)
+    per_slot = sum(v.nbytes for v in vs
+                   if baseline or classify(v) is VarClass.PRIVATE)
+    if per_slot == 0:
+        return 2 ** 30 if shared <= vmem_budget else 0
+    return max((vmem_budget - shared) // per_slot, 0)

@@ -1,0 +1,115 @@
+"""The coroutine engine: decoupled-DMA software pipelines for Pallas TPU.
+
+This is the TPU-native realization of CoroAMU's execution model
+(DESIGN.md §2). Correspondence:
+
+  aload/astore  -> pltpu.make_async_copy(...).start()        (issue)
+  getfin/bafin  -> semaphore wait on the slot being resumed   (poll/jump)
+  SPM slots     -> VMEM scratch shaped (depth, *tile)         (context)
+  coroutine     -> pipeline slot processing one tile
+  aset n        -> n copies signalling one slot semaphore; one wait-group
+  scheduler     -> modulo rotation over slots (mispredict-free by
+                   construction: control flow is compile-time scheduled)
+
+A kernel built on `coro_loop` keeps `depth` tiles in flight: while slot k's
+data is crossing HBM->VMEM, slots k-1, k-2, ... are being consumed - exactly
+the paper's interleaving of memory-driven coroutines.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def coro_loop(
+    n_tiles: int,
+    depth: int,
+    issue_fn: Callable[[Any, Any], None],
+    consume_fn: Callable[[Any, Any, Any], Any],
+    wait_fn: Callable[[Any, Any], None],
+    carry_init: Any = 0,
+):
+    """Run the coroutine pipeline over `n_tiles` with `depth` in flight.
+
+    issue_fn(tile, slot)          - start the decoupled copies for `tile`
+                                    into `slot` (aload/aset analogue)
+    wait_fn(tile, slot)           - block until slot's copies landed (getfin)
+    consume_fn(tile, slot, carry) - the coroutine body after resumption;
+                                    returns updated carry
+
+    `n_tiles`/`depth` are Python ints (grid is static); `tile`/`slot` are
+    traced int32 inside the steady-state loop.
+    """
+    depth = min(depth, n_tiles)
+    if depth <= 0:
+        return carry_init
+
+    # warmup: launch the initial coroutine batch (paper's Init Block)
+    for t in range(depth):
+        issue_fn(t, t)
+
+    def body(t, carry):
+        slot = jax.lax.rem(t, depth)
+        # resume the coroutine whose data has arrived (bafin: the schedule is
+        # compile-time so the "jump" costs nothing)
+        wait_fn(t, slot)
+        carry = consume_fn(t, slot, carry)
+
+        # recycle the slot: launch the next iteration (paper's Return Block)
+        @pl.when(t + depth < n_tiles)
+        def _():
+            issue_fn(t + depth, slot)
+
+        return carry
+
+    return jax.lax.fori_loop(0, n_tiles, body, carry_init)
+
+
+# ------------------------------------------------------------- DMA helpers
+
+
+def issue_rows(hbm_ref, row_ids: Sequence, slot_buf, sem, *, rows_per_copy: int = 1):
+    """aset-style group: one DMA per row id, all bound to `sem`.
+
+    row_ids are traced int32 scalars; each copies `rows_per_copy` contiguous
+    rows from `hbm_ref` into consecutive positions of `slot_buf`.
+    """
+    for j, r in enumerate(row_ids):
+        pltpu.make_async_copy(
+            hbm_ref.at[pl.ds(r, rows_per_copy)],
+            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
+            sem,
+        ).start()
+
+
+def wait_rows(slot_buf, sem, n_copies: int, *, rows_per_copy: int = 1):
+    """Wait for an issue_rows group (one wait per constituent copy)."""
+    for j in range(n_copies):
+        pltpu.make_async_copy(
+            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
+            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
+            sem,
+        ).wait()
+
+
+def issue_block(hbm_ref, start, slot_buf, sem, *, rows: int):
+    """Coarse-grained request (paper §III-C case 1): one span DMA."""
+    pltpu.make_async_copy(hbm_ref.at[pl.ds(start, rows)], slot_buf, sem).start()
+
+
+def wait_block(slot_buf, sem):
+    pltpu.make_async_copy(slot_buf, slot_buf, sem).wait()
+
+
+def store_block(slot_buf, hbm_ref, start, sem, *, rows: int):
+    """astore analogue: decoupled write-back VMEM -> HBM."""
+    pltpu.make_async_copy(slot_buf, hbm_ref.at[pl.ds(start, rows)], sem).start()
+
+
+def wait_store(slot_buf, hbm_ref, start, sem, *, rows: int):
+    pltpu.make_async_copy(slot_buf, hbm_ref.at[pl.ds(start, rows)], sem).wait()

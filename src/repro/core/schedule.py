@@ -1,0 +1,90 @@
+"""Scheduling policies and the latency-aware depth solver (CoroAMU §III-D).
+
+The paper contrasts:
+  static   - fixed launch order tuned for ONE latency; degrades when latency
+             varies (prefetch-distance mismatch) and is capped by MSHRs.
+  dynamic  - resume whichever coroutine's data arrived (getfin/bafin);
+             adapts to variable latency, capped only by SPM request slots.
+
+TPU adaptation (DESIGN.md §2.1): the DMA completion oracle exists at issue
+time, so the dynamic scheduler collapses to a rotation whose DEPTH must cover
+the worst-case latency — adaptivity moves into `solve_depth`, which takes the
+latency bound as an input instead of polling at run time. `adaptive_depth`
+re-solves from observed latency samples (the run-time feedback loop the
+paper's Return Block implements in hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+# v5e-class constants (see repro.roofline)
+VMEM_BYTES = 128 * 1024 * 1024
+HBM_LATENCY_S = 700e-9          # HBM round-trip seen by a DMA
+HBM_BW = 819e9
+PEAK_FLOPS = 197e12
+
+
+@dataclasses.dataclass(frozen=True)
+class TileProfile:
+    """One coroutine's footprint and work."""
+
+    tile_bytes: int              # bytes DMA'd per tile (the context data)
+    flops_per_tile: float        # compute after resumption
+    private_bytes: int = 0       # extra per-slot context (core.context)
+    shared_bytes: int = 0        # depth-independent VMEM residents
+
+
+def tile_compute_s(p: TileProfile) -> float:
+    return p.flops_per_tile / PEAK_FLOPS
+
+
+def tile_transfer_s(p: TileProfile) -> float:
+    return p.tile_bytes / HBM_BW
+
+
+def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
+                vmem_budget: int = VMEM_BYTES) -> int:
+    """Smallest depth that hides `latency_s`, capped by the VMEM budget.
+
+    Hiding condition (paper §II insight, adapted): while one tile's DMA is in
+    flight (latency + transfer), the other depth-1 slots must supply enough
+    compute:  (depth-1) * t_compute >= latency + t_transfer.
+    """
+    tc = max(tile_compute_s(p), 1e-12)
+    need = math.ceil((latency_s + tile_transfer_s(p)) / tc) + 1
+    per_slot = p.tile_bytes + p.private_bytes
+    cap = max((vmem_budget - p.shared_bytes) // max(per_slot, 1), 1)
+    return int(max(2, min(need, cap)))
+
+
+def achieved_bandwidth(p: TileProfile, depth: int,
+                       *, latency_s: float = HBM_LATENCY_S) -> float:
+    """Steady-state HBM bytes/s of the pipeline at a given depth.
+
+    Each slot cycles through issue -> in-flight(latency+transfer) -> compute.
+    With `depth` slots, a tile completes every
+    max(t_compute, (latency + t_transfer + t_compute)/depth).
+    """
+    tc = tile_compute_s(p)
+    tt = tile_transfer_s(p)
+    period = max(tc, (latency_s + tt + tc) / depth, tt)
+    return p.tile_bytes / period
+
+
+def adaptive_depth(p: TileProfile, latency_samples_s: Sequence[float],
+                   *, quantile: float = 0.95,
+                   vmem_budget: int = VMEM_BYTES) -> int:
+    """Dynamic-scheduler analogue: re-solve depth from observed latencies."""
+    if not latency_samples_s:
+        return solve_depth(p, vmem_budget=vmem_budget)
+    xs = sorted(latency_samples_s)
+    q = xs[min(int(quantile * len(xs)), len(xs) - 1)]
+    return solve_depth(p, latency_s=q, vmem_budget=vmem_budget)
+
+
+def static_prefetch_depth(p: TileProfile, *, latency_s: float,
+                          mshr_limit: int = 16) -> int:
+    """The baseline the paper improves on: prefetch distance capped by MSHRs."""
+    return min(solve_depth(p, latency_s=latency_s), mshr_limit)

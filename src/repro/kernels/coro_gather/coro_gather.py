@@ -1,0 +1,135 @@
+"""Coroutine gather kernel: random-row gather with decoupled DMA pipeline.
+
+The paper's flagship pattern (GUPS read side, hash-join probe, embedding
+lookup). Each grid step consumes one tile of `rows_per_tile` gathered rows;
+`depth` tiles are in flight at once, each tile's rows being an `aset` group
+of row-DMAs bound to one slot semaphore. The schedule is the mispredict-free
+rotation of DESIGN.md §2.1.
+
+Two variants:
+  * row gather  — one DMA per requested row (uncoalesced).
+  * span gather — one DMA per `span` contiguous rows (the coarse-grained
+    request of §III-C; fed by core.descriptors.plan_gather).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coro import coro_loop, issue_rows, wait_rows
+
+
+def _row_gather_kernel(idx_ref, table_ref, out_ref, slots, sems, *,
+                       depth: int, rows_per_tile: int, n_tiles: int):
+    i = pl.program_id(0)
+
+    def issue(tile, slot):
+        rows = [idx_ref[tile * rows_per_tile + j] for j in range(rows_per_tile)]
+        issue_rows(table_ref, rows, slots.at[slot], sems.at[slot])
+
+    def wait(tile, slot):
+        wait_rows(slots.at[slot], sems.at[slot], rows_per_tile)
+
+    # warmup once (scratch persists across grid steps)
+    @pl.when(i == 0)
+    def _():
+        for t in range(min(depth, n_tiles)):
+            issue(t, t)
+
+    slot = jax.lax.rem(i, depth)
+    wait(i, slot)
+    out_ref[...] = slots[slot]
+
+    @pl.when(i + depth < n_tiles)
+    def _():
+        issue(i + depth, slot)
+
+
+def row_gather(table, idx, *, depth: int = 4, rows_per_tile: int = 8,
+               interpret: bool = True):
+    """out[i] = table[idx[i]]. idx length must divide into rows_per_tile."""
+    n = idx.shape[0]
+    assert n % rows_per_tile == 0, (n, rows_per_tile)
+    n_tiles = n // rows_per_tile
+    d = table.shape[1]
+    depth = min(depth, n_tiles)
+
+    kernel = functools.partial(
+        _row_gather_kernel, depth=depth, rows_per_tile=rows_per_tile,
+        n_tiles=n_tiles,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((rows_per_tile, d), lambda i, idx_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+def _span_gather_kernel(starts_ref, table_ref, out_ref, slots, sems, *,
+                        depth: int, span: int, n_tiles: int):
+    i = pl.program_id(0)
+
+    def issue(tile, slot):
+        pltpu.make_async_copy(
+            table_ref.at[pl.ds(starts_ref[tile], span)],
+            slots.at[slot],
+            sems.at[slot],
+        ).start()
+
+    @pl.when(i == 0)
+    def _():
+        for t in range(min(depth, n_tiles)):
+            issue(t, t)
+
+    slot = jax.lax.rem(i, depth)
+    pltpu.make_async_copy(slots.at[slot], slots.at[slot], sems.at[slot]).wait()
+    out_ref[...] = slots[slot]
+
+    @pl.when(i + depth < n_tiles)
+    def _():
+        issue(i + depth, slot)
+
+
+def span_gather(table, starts, *, span: int = 8, depth: int = 4,
+                interpret: bool = True):
+    """out[i*span:(i+1)*span] = table[starts[i]:starts[i]+span]."""
+    n_tiles = starts.shape[0]
+    d = table.shape[1]
+    depth = min(depth, max(n_tiles, 1))
+    if n_tiles == 0:
+        return jnp.zeros((0, d), table.dtype)
+
+    kernel = functools.partial(
+        _span_gather_kernel, depth=depth, span=span, n_tiles=n_tiles,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((span, d), lambda i, starts_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((depth, span, d), table.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles * span, d), table.dtype),
+        interpret=interpret,
+    )(starts, table)

@@ -1,0 +1,66 @@
+"""Public ops for the coroutine gather: padding, coalescing, autodepth."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptors import GatherPlan, plan_gather
+from repro.core.schedule import TileProfile, solve_depth
+from repro.kernels.coro_gather.coro_gather import row_gather, span_gather
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def auto_depth(rows_per_tile: int, d: int, itemsize: int, *, flops_per_row: float = 64.0) -> int:
+    """Latency-aware depth (CoroAMU dynamic-scheduler analogue)."""
+    p = TileProfile(
+        tile_bytes=rows_per_tile * d * itemsize,
+        flops_per_tile=flops_per_row * rows_per_tile,
+    )
+    return min(solve_depth(p), 16)
+
+
+def coro_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
+                interpret: bool | None = None):
+    """Pipelined gather; pads the index stream to a tile multiple."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = idx.shape[0]
+    if depth is None:
+        depth = auto_depth(rows_per_tile, table.shape[1], table.dtype.itemsize)
+    pad = (-n) % rows_per_tile
+    idx_p = jnp.pad(idx, (0, pad)) if pad else idx
+    out = row_gather(table, idx_p.astype(jnp.int32), depth=depth,
+                     rows_per_tile=rows_per_tile, interpret=interpret)
+    return out[:n]
+
+
+def coalesced_gather(table, idx: np.ndarray, *, span: int = 8,
+                     depth: int | None = None, interpret: bool | None = None):
+    """Coalesced gather (paper §III-C): span DMAs + single-row leftovers.
+
+    `idx` is host data (the plan is a compile-time pass, like the paper's
+    greedy basic-block scheduling). Returns (out, plan) so callers can report
+    the coalescing ratio.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    plan = plan_gather(np.asarray(idx), span=span)
+    d = table.shape[1]
+    if depth is None:
+        depth = auto_depth(span, d, table.dtype.itemsize)
+    parts = []
+    if plan.n_spans:
+        parts.append(span_gather(table, jnp.asarray(plan.span_starts),
+                                 span=span, depth=depth, interpret=interpret))
+    if plan.n_singles:
+        parts.append(coro_gather(table, jnp.asarray(plan.singles),
+                                 rows_per_tile=min(8, max(plan.n_singles, 1)),
+                                 depth=depth, interpret=interpret))
+    if not parts:
+        return jnp.zeros((0, d), table.dtype), plan
+    flat = jnp.concatenate(parts, axis=0)
+    return flat[jnp.asarray(plan.order)], plan

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the coroutine gather kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_ref(table, idx):
+    """out[i] = table[idx[i]] — the GUPS / hash-probe / embedding pattern."""
+    return jnp.take(table, idx, axis=0)
+
+
+def gather_scale_ref(table, idx, scale=1.0):
+    return jnp.take(table, idx, axis=0) * scale

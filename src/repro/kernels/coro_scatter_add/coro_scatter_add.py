@@ -1,0 +1,119 @@
+"""Coroutine scatter-add: pipelined read-modify-write with decoupled DMA.
+
+GUPS's update side (and embedding-gradient / histogram scatter). Each tile:
+  aload rows -> wait -> add updates -> astore rows -> (slot reused later)
+
+Hazards:
+  * duplicate rows across in-flight tiles would race; the paper serializes
+    with await/asignal locks — our compile-time analogue is the sort+dedup
+    transform in ops.py (each row is written exactly once; see
+    core.descriptors.dedup_rmw).
+  * slot reuse: a slot's next load may overwrite data still being stored.
+    in_slots/out_slots are separate, and the store semaphore is awaited
+    before the slot's output buffer is rewritten.
+
+The table is updated in place via input_output_aliasing (the SPM region the
+paper manages in L2 is the VMEM slot set here; HBM is the far memory).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.coro import issue_rows, wait_rows
+
+
+def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref, in_slots,
+                        out_slots, load_sems, store_sems, *, depth: int,
+                        rows_per_tile: int, n_tiles: int):
+    i = pl.program_id(0)
+
+    def rows_of(tile):
+        return [idx_ref[tile * rows_per_tile + j] for j in range(rows_per_tile)]
+
+    def issue_load(tile, slot):
+        issue_rows(out_ref, rows_of(tile), in_slots.at[slot], load_sems.at[slot])
+
+    def start_store(tile, slot):
+        for j, r in enumerate(rows_of(tile)):
+            pltpu.make_async_copy(
+                out_slots.at[slot, pl.ds(j, 1)],
+                out_ref.at[pl.ds(r, 1)],
+                store_sems.at[slot],
+            ).start()
+
+    def wait_store(slot):
+        for j in range(rows_per_tile):
+            pltpu.make_async_copy(
+                out_slots.at[slot, pl.ds(j, 1)],
+                out_slots.at[slot, pl.ds(j, 1)],
+                store_sems.at[slot],
+            ).wait()
+
+    @pl.when(i == 0)
+    def _():
+        for t in range(min(depth, n_tiles)):
+            issue_load(t, t)
+
+    slot = jax.lax.rem(i, depth)
+    wait_rows(in_slots.at[slot], load_sems.at[slot], rows_per_tile)
+
+    # drain the slot's previous store before rewriting its output buffer
+    @pl.when(i >= depth)
+    def _():
+        wait_store(slot)
+
+    out_slots[slot] = in_slots[slot] + upd_ref[...]
+    start_store(i, slot)
+
+    @pl.when(i + depth < n_tiles)
+    def _():
+        issue_load(i + depth, slot)
+
+    # final drain: every slot has exactly one outstanding store at the end
+    # (earlier ones were drained before their buffer was rewritten)
+    @pl.when(i == n_tiles - 1)
+    def _():
+        for s in range(min(depth, n_tiles)):
+            wait_store(s)
+
+
+def scatter_add_unique(table, idx, updates, *, depth: int = 4,
+                       rows_per_tile: int = 8, interpret: bool = True):
+    """In-place pipelined RMW. `idx` must be duplicate-free (see ops.py)."""
+    n = idx.shape[0]
+    assert n % rows_per_tile == 0
+    n_tiles = n // rows_per_tile
+    d = table.shape[1]
+    depth = min(depth, n_tiles)
+
+    kernel = functools.partial(
+        _scatter_add_kernel, depth=depth, rows_per_tile=rows_per_tile,
+        n_tiles=n_tiles,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),   # table (aliased to out)
+            pl.BlockSpec((rows_per_tile, d), lambda i, idx_ref: (i, 0)),  # updates
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
+            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={1: 0},  # table (operand 1 incl. prefetch) -> out
+        interpret=interpret,
+    )(idx, table, updates)

@@ -1,0 +1,48 @@
+"""Public scatter-add op: dedup (await/asignal analogue) + pipelined RMW."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptors import dedup_rmw
+from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_unique
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def coro_scatter_add(table, idx, updates, *, depth: int = 4,
+                     rows_per_tile: int = 8, interpret: bool | None = None):
+    """table[idx[i]] += updates[i] with duplicates combined up front.
+
+    The dedup is the compile-time replacement for the paper's await/asignal
+    coroutine locks (DESIGN.md §2.1): after it, no two in-flight slots can
+    target the same row, so the RMW pipeline is race-free by construction.
+    `idx` is host data (plan-time pass).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    uniq, summed = dedup_rmw(np.asarray(idx), np.asarray(updates))
+    n = uniq.shape[0]
+    pad = (-n) % rows_per_tile
+    if pad:
+        # pad with distinct out-of-range-free rows: reuse row 0..pad-1 of the
+        # table with zero updates is unsafe (duplicates) — instead pad with
+        # rows beyond the used set via a zero-update self-write on unique
+        # sentinel rows taken from the deduped complement. Simplest safe pad:
+        # replicate the LAST unique row with zero update is still a duplicate
+        # in-flight hazard only if it lands in a different tile; keep it in
+        # the same tile by padding with ascending unused ids when possible.
+        all_ids = np.arange(table.shape[0])
+        unused = np.setdiff1d(all_ids, uniq)[:pad]
+        if unused.shape[0] < pad:
+            raise ValueError("cannot pad: every row is a scatter target")
+        uniq = np.concatenate([uniq, unused.astype(uniq.dtype)])
+        summed = np.concatenate(
+            [summed, np.zeros((pad,) + summed.shape[1:], summed.dtype)]
+        )
+    return scatter_add_unique(
+        table, jnp.asarray(uniq, jnp.int32), jnp.asarray(summed),
+        depth=depth, rows_per_tile=rows_per_tile, interpret=interpret,
+    )

@@ -1,0 +1,9 @@
+"""Oracle for the coroutine scatter-add (GUPS update / histogram / MoE combine)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_add_ref(table, idx, updates):
+    """table[idx[i]] += updates[i] (duplicates accumulate)."""
+    return table.at[idx].add(updates)

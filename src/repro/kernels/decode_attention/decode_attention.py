@@ -1,0 +1,114 @@
+"""Flash-decode kernel: KV-cache streaming with the coroutine pipeline.
+
+One decode token attends over a long KV cache living in HBM ("far memory").
+Each KV block is one coroutine: its k/v DMAs form an aset group on a slot
+semaphore; while block i is in flight, blocks i-1..i-depth+1 are being
+consumed by the online-softmax accumulator. This is the paper's pattern at
+its purest — latency-bound streaming with O(1) compute per byte — and the
+kernel the serving path uses on TPU (jnp twin: models.common.decode_attention).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, k_slots, v_slots,
+                   sems, m_s, l_s, acc_s, *, depth: int, blk: int,
+                   n_blocks: int, kh: int, g: int, d: int):
+    b = pl.program_id(0)
+    pos = pos_ref[0]
+
+    def issue(blk_i, slot):
+        start = blk_i * blk
+        pltpu.make_async_copy(k_ref.at[b, pl.ds(start, blk)], k_slots.at[slot],
+                              sems.at[slot]).start()
+        pltpu.make_async_copy(v_ref.at[b, pl.ds(start, blk)], v_slots.at[slot],
+                              sems.at[slot]).start()
+
+    def wait(slot):
+        pltpu.make_async_copy(k_slots.at[slot], k_slots.at[slot],
+                              sems.at[slot]).wait()
+        pltpu.make_async_copy(v_slots.at[slot], v_slots.at[slot],
+                              sems.at[slot]).wait()
+
+    # fresh accumulators for this batch element
+    m_s[...] = jnp.full_like(m_s, NEG_INF)
+    l_s[...] = jnp.zeros_like(l_s)
+    acc_s[...] = jnp.zeros_like(acc_s)
+
+    for t in range(min(depth, n_blocks)):
+        issue(t, t)
+
+    q = q_ref[0].reshape(kh, g, d).astype(jnp.float32) * (d ** -0.5)
+
+    def body(i, _):
+        slot = jax.lax.rem(i, depth)
+        wait(slot)
+        k = k_slots[slot].astype(jnp.float32)   # [blk, kh, d]
+        v = v_slots[slot].astype(jnp.float32)
+        s = jnp.einsum("kgd,bkd->kgb", q, k)    # [kh, g, blk]
+        kpos = i * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m_s[...], s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_s[...] - m_new)
+        l_s[...] = l_s[...] * corr + p.sum(axis=-1)
+        acc_s[...] = acc_s[...] * corr[..., None] + jnp.einsum("kgb,bkd->kgd", p, v)
+        m_s[...] = m_new
+
+        @pl.when(i + depth < n_blocks)
+        def _():
+            issue(i + depth, slot)
+
+        return 0
+
+    jax.lax.fori_loop(0, n_blocks, body, 0)
+    out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+    o_ref[...] = out.reshape(1, kh * g, d).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128, depth: int = 4,
+                 interpret: bool = True):
+    """q: [B,H,D]; caches: [B,S,KH,D]; pos: scalar int32. Returns [B,H,D]."""
+    bsz, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    assert s % blk == 0
+    n_blocks = s // blk
+    g = h // kh
+    depth = min(depth, n_blocks)
+
+    kernel = functools.partial(
+        _decode_kernel, depth=depth, blk=blk, n_blocks=n_blocks,
+        kh=kh, g=g, d=d,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, pos_ref: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, pos_ref: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((depth, blk, kh, d), k_cache.dtype),
+            pltpu.VMEM((depth, blk, kh, d), v_cache.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g), jnp.float32),
+            pltpu.VMEM((kh, g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray([pos], jnp.int32), q, k_cache, v_cache)

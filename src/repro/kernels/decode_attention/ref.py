@@ -1,0 +1,23 @@
+"""Oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """q: [B,H,D]; caches: [B,S,KH,D]; attend to positions <= pos.
+
+    Returns [B,H,D].
+    """
+    b, h, d = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, kh, g, d) * (d ** -0.5)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

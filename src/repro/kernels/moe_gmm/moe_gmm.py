@@ -1,0 +1,42 @@
+"""Grouped matmul for MoE experts with streamed weight tiles.
+
+In expert-parallel MoE the *weights* are the far-memory objects: each local
+expert's [dm, f] matrix is streamed HBM->VMEM tile-by-tile while the MXU
+consumes the previous tile — the coroutine pipeline with weight tiles as the
+in-flight context (CoroAMU's HJ build side). BlockSpec tiling supplies the
+double-buffered schedule; block shapes keep MXU dims at 128-multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gmm_kernel(t_ref, w_ref, o_ref):
+    # t: [1, C, dm], w: [1, dm, ft] -> o: [1, C, ft]
+    o_ref[...] = jnp.einsum(
+        "cd,df->cf", t_ref[0], w_ref[0],
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)[None]
+
+
+def gmm(tokens, weights, *, f_tile: int = 128, interpret: bool = True):
+    """tokens: [E, C, dm]; weights: [E, dm, f] -> [E, C, f]."""
+    e, c, dm = tokens.shape
+    f = weights.shape[-1]
+    assert f % f_tile == 0
+    grid = (e, f // f_tile)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, dm), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, dm, f_tile), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, c, f_tile), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), tokens.dtype),
+        interpret=interpret,
+    )(tokens, weights)

@@ -1,0 +1,15 @@
+"""Public grouped-matmul op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.moe_gmm.moe_gmm import gmm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def moe_gmm(tokens, weights, *, f_tile: int = 128, interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return gmm(tokens, weights, f_tile=f_tile, interpret=interpret)

@@ -1,0 +1,7 @@
+"""Oracle for the grouped-matmul (expert FFN) kernel."""
+import jax.numpy as jnp
+
+
+def gmm_ref(tokens, weights):
+    """tokens: [E, C, dm]; weights: [E, dm, f] -> [E, C, f]."""
+    return jnp.einsum("ecd,edf->ecf", tokens, weights)

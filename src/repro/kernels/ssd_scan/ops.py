@@ -1,0 +1,16 @@
+"""Public SSD-scan op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 64, interpret: bool | None = None):
+    """Batched SSD. x:[b,s,nh,p] dt:[b,s,nh] A:[nh] B,C:[b,s,n]."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,4 @@
+"""Oracle for the SSD-scan kernel: the sequential recurrence (models.ssm)."""
+from repro.models.ssm import ssd_sequential, ssd_chunked  # noqa: F401
+
+ssd_ref = ssd_sequential

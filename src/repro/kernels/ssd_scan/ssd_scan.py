@@ -1,0 +1,97 @@
+"""Chunked SSD (Mamba-2) scan kernel with streaming state.
+
+Grid = (batch, chunks): each step processes one sequence chunk; the
+recurrent state [H,P,N] lives in VMEM scratch across chunk steps (the
+paper's "sequential" variable class — core/context.py) and resets at each
+new batch element. Chunk inputs (x, dt, B, C) stream HBM->VMEM through
+Pallas's BlockSpec pipeline, which is the compiler-generated form of the
+same decoupled issue/wait mechanism the manual kernels spell out (the block
+for step i+1 is being DMA'd while step i computes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_s, *,
+                chunk: int, nh: int, p: int, n: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    x = x_ref[0].astype(jnp.float32)      # [chunk, nh, p]
+    dt = dt_ref[0].astype(jnp.float32)    # [chunk, nh]
+    B = b_ref[0].astype(jnp.float32)      # [chunk, n]
+    C = c_ref[0].astype(jnp.float32)      # [chunk, n]
+    A = a_ref[...].astype(jnp.float32)    # [nh]
+
+    dA = dt * A                            # [chunk, nh] (<=0)
+    cs = jnp.cumsum(dA, axis=0)
+    total = cs[-1]                         # [nh]
+    dtx = x * dt[..., None]                # [chunk, nh, p]
+    scores = C @ B.T                       # [chunk, chunk]
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    ys = []
+    h_next = []
+    for h in range(nh):
+        seg = cs[:, None, h] - cs[None, :, h]
+        L = jnp.exp(seg) * causal
+        y_intra = (scores * L) @ dtx[:, h]
+        h_prev = h_s[h]                                    # [p, n]
+        y_inter = jnp.exp(cs[:, h])[:, None] * (C @ h_prev.T)
+        ys.append(y_intra + y_inter)
+        decay_to_end = jnp.exp(total[h] - cs[:, h])
+        s_chunk = (B * decay_to_end[:, None]).T @ dtx[:, h]  # [n, p]
+        h_next.append(h_prev * jnp.exp(total[h]) + s_chunk.T)
+
+    y_ref[...] = jnp.stack(ys, axis=1).astype(y_ref.dtype)[None]
+    for h in range(nh):
+        h_s[h] = h_next[h]
+
+    @pl.when(ci == n_chunks - 1)
+    def _():
+        hout_ref[...] = h_s[...].astype(hout_ref.dtype)[None]
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
+    """Batched SSD. x:[b,s,nh,p] dt:[b,s,nh] A:[nh] B,C:[b,s,n].
+
+    Returns (y [b,s,nh,p], h_final [b,nh,p,n]).
+    """
+    bsz, s, nh, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nh=nh, p=p, n=n,
+                               n_chunks=n_chunks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bsz, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh, p), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, chunk, nh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((nh,), lambda b, i: (0,)),
+            pl.BlockSpec((1, chunk, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, nh, p), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, nh, p, n), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, nh, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, nh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return out[0], out[1]

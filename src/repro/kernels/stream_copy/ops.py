@@ -1,0 +1,16 @@
+"""Public STREAM-triad op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.stream_copy.stream_copy import triad
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def stream_triad(b, c, scalar, *, rows: int = 128, depth: int = 4,
+                 interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return triad(b, c, scalar, rows=rows, depth=depth, interpret=interpret)

@@ -1,0 +1,6 @@
+"""Oracle for the STREAM-triad coroutine kernel."""
+
+
+def triad_ref(b, c, scalar):
+    """a = b + scalar * c (McCalpin STREAM triad)."""
+    return b + scalar * c

@@ -1,0 +1,94 @@
+"""STREAM triad with an explicit decoupled load/store pipeline.
+
+The bandwidth-bound end of the paper's benchmark suite (Table II). Unlike the
+gather kernels, every request is a maximal coarse-grained span (the paper's
+§III-C case 1 — unit-stride loops coalesce perfectly), so the pipeline
+measures pure issue/consume overlap: tiles of b and c stream in as one aset
+group of two span DMAs per slot while a-tiles stream back out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
+                  load_sems, store_sems, *, depth: int, rows: int, n_tiles: int):
+    i = pl.program_id(0)
+
+    def issue(tile, slot):
+        start = tile * rows
+        pltpu.make_async_copy(b_ref.at[pl.ds(start, rows)], b_slots.at[slot],
+                              load_sems.at[slot]).start()
+        pltpu.make_async_copy(c_ref.at[pl.ds(start, rows)], c_slots.at[slot],
+                              load_sems.at[slot]).start()
+
+    def wait_loads(slot):
+        pltpu.make_async_copy(b_slots.at[slot], b_slots.at[slot],
+                              load_sems.at[slot]).wait()
+        pltpu.make_async_copy(c_slots.at[slot], c_slots.at[slot],
+                              load_sems.at[slot]).wait()
+
+    def wait_store(slot):
+        pltpu.make_async_copy(a_slots.at[slot], a_slots.at[slot],
+                              store_sems.at[slot]).wait()
+
+    @pl.when(i == 0)
+    def _():
+        for t in range(min(depth, n_tiles)):
+            issue(t, t)
+
+    slot = jax.lax.rem(i, depth)
+    wait_loads(slot)
+
+    @pl.when(i >= depth)
+    def _():
+        wait_store(slot)
+
+    a_slots[slot] = b_slots[slot] + s_ref[0] * c_slots[slot]
+    pltpu.make_async_copy(a_slots.at[slot], a_ref.at[pl.ds(i * rows, rows)],
+                          store_sems.at[slot]).start()
+
+    @pl.when(i + depth < n_tiles)
+    def _():
+        issue(i + depth, slot)
+
+    @pl.when(i == n_tiles - 1)
+    def _():
+        for s in range(min(depth, n_tiles)):
+            wait_store(s)
+
+
+def triad(b, c, scalar, *, rows: int = 128, depth: int = 4,
+          interpret: bool = True):
+    """a = b + scalar*c over [N, d] arrays, N a multiple of `rows`."""
+    n, d = b.shape
+    assert n % rows == 0
+    n_tiles = n // rows
+    depth = min(depth, n_tiles)
+    kernel = functools.partial(_triad_kernel, depth=depth, rows=rows,
+                               n_tiles=n_tiles)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,   # scalar in SMEM
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((depth, rows, d), b.dtype),
+            pltpu.VMEM((depth, rows, d), b.dtype),
+            pltpu.VMEM((depth, rows, d), b.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), b.dtype),
+        interpret=interpret,
+    )(jnp.asarray([scalar], b.dtype), b, c)

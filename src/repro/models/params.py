@@ -1,0 +1,80 @@
+"""Parameter declaration: shapes + logical axes + initializers in one tree.
+
+Models declare a pytree of ``ParamSpec``; the tree can then be materialized as
+  * ShapeDtypeStructs (dry-run: no allocation),
+  * real initialized arrays (tests / training),
+  * PartitionSpecs / NamedShardings (via repro.sharding.ShardingCtx).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | fan_in
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract(tree):
+    """ShapeDtypeStruct tree (for .lower / eval_shape; no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=is_spec
+    )
+
+
+def initialize(rng, tree, *, on_host: bool = True):
+    """Materialize real parameter arrays (CPU tests / examples)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, s in zip(keys, leaves):
+        if s.init == "zeros":
+            a = jnp.zeros(s.shape, s.dtype)
+        elif s.init == "ones":
+            a = jnp.ones(s.shape, s.dtype)
+        else:
+            scale = s.scale
+            if s.init == "fan_in":
+                fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            a = (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(s.dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def partition_specs(tree, ctx: ShardingCtx):
+    return jax.tree.map(lambda s: ctx.spec(s.axes, s.shape), tree, is_leaf=is_spec)
+
+
+def shardings(tree, ctx: ShardingCtx):
+    if ctx.mesh is None:
+        return None
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, ctx.spec(s.axes, s.shape)),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def count(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec))

@@ -1,0 +1,62 @@
+"""Model facade: bind an ArchConfig (+ShardingCtx) to the unified LM functions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSuite
+from repro.models import lm
+from repro.models import params as pm
+from repro.sharding import NULL_CTX, ShardingCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    ctx: ShardingCtx = NULL_CTX
+
+    # ------------------------------------------------------------- params
+    def param_specs(self):
+        return lm.param_specs(self.cfg)
+
+    def abstract_params(self):
+        return pm.abstract(self.param_specs())
+
+    def init(self, rng):
+        return pm.initialize(rng, self.param_specs())
+
+    def param_shardings(self):
+        return pm.shardings(self.param_specs(), self.ctx)
+
+    def param_partition_specs(self):
+        return pm.partition_specs(self.param_specs(), self.ctx)
+
+    def n_params(self) -> int:
+        return pm.count(self.param_specs())
+
+    # -------------------------------------------------------------- steps
+    def loss(self, params, batch):
+        return lm.loss_fn(params, batch, self.cfg, self.ctx)
+
+    def prefill(self, params, batch, pad_to=None):
+        return lm.prefill(params, batch, self.cfg, self.ctx, pad_to=pad_to)
+
+    def decode_step(self, params, cache, batch):
+        return lm.decode_step(params, cache, batch, self.cfg, self.ctx)
+
+    # -------------------------------------------------------------- cache
+    def cache_specs(self, shape: ShapeSuite):
+        return lm.cache_specs(self.cfg, shape)
+
+    def abstract_cache(self, shape: ShapeSuite):
+        return pm.abstract(self.cache_specs(shape))
+
+    def cache_shardings(self, shape: ShapeSuite):
+        return pm.shardings(self.cache_specs(shape), self.ctx)
+
+
+def build_model(cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX) -> Model:
+    return Model(cfg=cfg, ctx=ctx)

@@ -1,0 +1,295 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train path + O(1) decode.
+
+The chunked SSD algorithm streams sequence chunks through a small recurrent
+state — the same structure as the paper's coroutine pipeline (each chunk is an
+in-flight tile; the inter-chunk state is the "sequential" variable class of
+CoroAMU §III-B). kernels/ssd_scan implements the chunk loop with decoupled
+DMA; this module is the jnp model path and the oracle.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models.common import rms_norm
+
+# ----------------------------------------------------------------- SSD math
+
+
+def ssd_sequential(x, dt, A, B, C, h0=None):
+    """Reference recurrence. x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,n].
+
+    h_t = h_{t-1} * exp(A*dt_t) + dt_t * x_t outer B_t ;  y_t = h_t . C_t
+    Returns (y [b,s,h,p], h_final [b,h,p,n]).
+    """
+    b, s, nh, p = x.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # [b,h,p], [b,h], [b,n], [b,n]
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)[..., None, None]
+        h = h * decay + (dtt[..., None, None].astype(jnp.float32)
+                         * xt[..., None].astype(jnp.float32)
+                         * Bt[:, None, None, :].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct.astype(jnp.float32))
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), B.swapaxes(0, 1), C.swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None, unroll_heads: bool = False):
+    """Chunked SSD (Mamba-2 Alg. 1, single B/C group). Same signature/result
+    as ssd_sequential but O(s*chunk) attention-like work within chunks.
+
+    The intra-chunk decay matrix is formed per-head (scan over heads) so the
+    transient is [b,nc,q,k] instead of [b,nc,q,k,h]. `unroll_heads` switches
+    the head loop to a Python loop (dry-run exact cost accounting)."""
+    b, s, nh, p = x.shape
+    n = B.shape[-1]
+    if s % chunk != 0:
+        return ssd_sequential(x, dt, A, B, C, h0)
+    nc = s // chunk
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, nh, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, n).astype(f32)
+
+    dA = dtc * A  # [b,nc,q,h] (<= 0)
+    cs = jnp.cumsum(dA, axis=2)
+    total = cs[:, :, -1:, :]  # [b,nc,1,h]
+    dtx = xc * dtc[..., None]  # [b,nc,q,h,p]
+
+    # intra-chunk (attention-like) term, one head at a time
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # [b,nc,q,k]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None]
+
+    def head_y(cs_h, dtx_h):
+        # cs_h [b,nc,q], dtx_h [b,nc,k,p]
+        seg = cs_h[:, :, :, None] - cs_h[:, :, None, :]
+        L = jnp.where(causal, jnp.exp(seg), 0.0)
+        return jnp.einsum("bcqk,bckp->bcqp", scores * L, dtx_h)
+
+    if unroll_heads:
+        y_intra = jnp.stack(
+            [head_y(cs[..., h], dtx[..., h, :]) for h in range(nh)], axis=3
+        )  # [b,nc,q,h,p]
+    else:
+        ys = jax.lax.map(
+            lambda args: head_y(*args),
+            (jnp.moveaxis(cs, -1, 0), jnp.moveaxis(dtx, -2, 0)),
+        )  # [h,b,nc,q,p]
+        y_intra = jnp.moveaxis(ys, 0, 3)
+
+    # per-chunk input state contribution
+    decay_to_end = jnp.exp(total - cs)  # [b,nc,q,h]
+    s_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bc, decay_to_end, dtx)
+
+    # inter-chunk recurrence over nc
+    def step(h, inp):  # h: [b,h,p,n]
+        s_c, tot_c = inp  # [b,h,n,p], [b,h]
+        h_out = h
+        h = h * jnp.exp(tot_c)[..., None, None] + s_c.swapaxes(-1, -2)
+        return h, h_out
+
+    sc = s_chunk.transpose(1, 0, 2, 3, 4)           # [nc,b,h,n,p]
+    tc = total[:, :, 0, :].transpose(1, 0, 2)       # [nc,b,h]
+    h_fin, h_prevs = jax.lax.scan(lambda h, i: step(h, i), h0, (sc, tc))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)      # [b,nc,h,p,n]
+
+    # inter-chunk output term
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cs), h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, p).astype(x.dtype)
+    return y, h_fin
+
+
+# ------------------------------------------------------------ block plumbing
+
+
+def ssm_dims(cfg: ArchConfig) -> Dict[str, int]:
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    return dict(
+        di=di, n=n, nh=nh, p=cfg.ssm_head_dim,
+        conv_dim=di + 2 * n,
+        d_in_proj=2 * di + 2 * n + nh,
+    )
+
+
+def ssm_param_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = ssm_dims(cfg)
+    dm = cfg.d_model
+    common = {
+        "A_log": ParamSpec((d["nh"],), ("ssm_heads",), init="zeros"),
+        "dt_bias": ParamSpec((d["nh"],), ("ssm_heads",), init="zeros"),
+        "D": ParamSpec((d["nh"],), ("ssm_heads",), init="ones"),
+        "norm_w": ParamSpec((d["di"],), ("d_inner",), init="ones"),
+    }
+    if cfg.ssm_split_proj:
+        # shard-aligned: x/z projected per (head, head_dim) so the SSD runs
+        # head-dim tensor parallel with no cross-shard slicing (§Perf)
+        nh, p, n = d["nh"], d["p"], d["n"]
+        return {
+            **common,
+            "w_z": ParamSpec((dm, nh, p), ("embed", "ssm_heads", "head_dim"), init="fan_in"),
+            "w_x": ParamSpec((dm, nh, p), ("embed", "ssm_heads", "head_dim"), init="fan_in"),
+            "w_B": ParamSpec((dm, n), ("embed", "ssm_state"), init="fan_in"),
+            "w_C": ParamSpec((dm, n), ("embed", "ssm_state"), init="fan_in"),
+            "w_dt": ParamSpec((dm, nh), ("embed", "ssm_heads"), init="fan_in"),
+            "conv_x": ParamSpec((cfg.conv_width, nh, p), ("width", "ssm_heads", "head_dim"), init="fan_in"),
+            "conv_B": ParamSpec((cfg.conv_width, n), ("width", "ssm_state"), init="fan_in"),
+            "conv_C": ParamSpec((cfg.conv_width, n), ("width", "ssm_state"), init="fan_in"),
+            "conv_bx": ParamSpec((nh, p), ("ssm_heads", "head_dim"), init="zeros"),
+            "conv_bB": ParamSpec((n,), ("ssm_state",), init="zeros"),
+            "conv_bC": ParamSpec((n,), ("ssm_state",), init="zeros"),
+            "out_proj": ParamSpec((nh, p, dm), ("ssm_heads", "head_dim", "embed"), init="fan_in"),
+        }
+    return {
+        **common,
+        "in_proj": ParamSpec((dm, d["d_in_proj"]), ("embed", "d_inner"), init="fan_in"),
+        "conv_w": ParamSpec((cfg.conv_width, d["conv_dim"]), ("width", "conv_dim"), init="fan_in"),
+        "conv_b": ParamSpec((d["conv_dim"],), ("conv_dim",), init="zeros"),
+        "out_proj": ParamSpec((d["di"], dm), ("d_inner", "embed"), init="fan_in"),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    d = ssm_dims(cfg)
+    z = zxbcdt[..., : d["di"]]
+    xBC = zxbcdt[..., d["di"]: d["di"] + d["conv_dim"]]
+    dt = zxbcdt[..., d["di"] + d["conv_dim"]:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq. xBC:[B,S,C], w:[W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i: i + xBC.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def _forward_split(p, x, cfg: ArchConfig, h0=None, return_state=False):
+    """Shard-aligned SSD forward (§Perf): per-piece projections + depthwise
+    convs keep every tensor head-dim sharded; no cross-shard slicing."""
+    d = ssm_dims(cfg)
+    dt_ = x.dtype
+    nh, pp, n = d["nh"], d["p"], d["n"]
+    b, s, _ = x.shape
+    z = jnp.einsum("bsd,dhp->bshp", x, p["w_z"].astype(dt_))
+    xh = jnp.einsum("bsd,dhp->bshp", x, p["w_x"].astype(dt_))
+    Bs = x @ p["w_B"].astype(dt_)
+    Cs = x @ p["w_C"].astype(dt_)
+    dt = x @ p["w_dt"].astype(dt_)
+
+    def conv_h(u, w, bias):  # depthwise causal conv on [b,s,h,p]
+        width = w.shape[0]
+        pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0), (0, 0)))
+        out = sum(pad[:, i: i + s] * w[i][None, None] for i in range(width))
+        return out + bias[None, None]
+
+    xh = jax.nn.silu(conv_h(xh, p["conv_x"].astype(dt_), p["conv_bx"].astype(dt_)))
+    Bs = jax.nn.silu(_causal_conv(Bs, p["conv_B"].astype(dt_), p["conv_bB"].astype(dt_)))
+    Cs = jax.nn.silu(_causal_conv(Cs, p["conv_C"].astype(dt_), p["conv_bC"].astype(dt_)))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_fin = ssd_chunked(xh, dt, A, Bs, Cs, cfg.ssm_chunk, h0,
+                           unroll_heads=not cfg.scan_layers)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    g = (y * jax.nn.silu(z)).reshape(b, s, nh * pp)
+    g = rms_norm(g, p["norm_w"], cfg.norm_eps).reshape(b, s, nh, pp)
+    out = jnp.einsum("bshp,hpd->bsd", g, p["out_proj"].astype(dt_))
+    if return_state:
+        raise NotImplementedError(
+            "ssm_split_proj is a training-layout optimization; decode/prefill "
+            "cache handoff uses the joint in_proj layout")
+    return out
+
+
+def ssm_forward(p, x, cfg: ArchConfig, h0=None, conv0=None, return_state=False):
+    """Full-sequence SSD block. x: [B,S,d_model] -> [B,S,d_model]."""
+    if cfg.ssm_split_proj and "w_x" in p:
+        # split path keeps its own conv handling; conv0/decode handoff uses
+        # the joint layout (training/prefill-analysis path only)
+        assert conv0 is None, "split-proj path is for full-sequence analysis"
+        return _forward_split(p, x, cfg, h0, return_state)
+    d = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    if conv0 is not None:
+        ext = jnp.concatenate([conv0.astype(xBC.dtype), xBC], axis=1)
+        conv_out = _causal_conv(ext, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+        xBC = conv_out[:, conv0.shape[1]:]
+    else:
+        xBC = _causal_conv(xBC, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xBC = jax.nn.silu(xBC)
+    xs = xBC[..., : d["di"]]
+    Bs = xBC[..., d["di"]: d["di"] + d["n"]]
+    Cs = xBC[..., d["di"] + d["n"]:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(*xs.shape[:-1], d["nh"], d["p"])
+    y, h_fin = ssd_chunked(xh, dt, A, Bs, Cs, cfg.ssm_chunk, h0,
+                           unroll_heads=not cfg.scan_layers)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(*xs.shape)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        # conv state: last (W-1) pre-activation xBC inputs
+        zx = _split_proj(zxbcdt, cfg)[1]
+        if conv0 is not None:
+            zx = jnp.concatenate([conv0.astype(zx.dtype), zx], axis=1)
+        conv_state = zx[:, -(cfg.conv_width - 1):, :]
+        return out, h_fin, conv_state
+    return out
+
+
+def ssm_decode(p, cache: Dict[str, jax.Array], x, cfg: ArchConfig):
+    """One-token decode. x: [B,1,d_model]; cache: {"h":[B,H,P,N], "conv":[B,W-1,conv_dim]}."""
+    d = ssm_dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    ext = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+    conv_out = _causal_conv(ext, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    new_conv = ext[:, 1:, :]
+    xBC = jax.nn.silu(conv_out[:, -1:, :])
+    xs = xBC[..., : d["di"]]
+    Bs = xBC[..., d["di"]: d["di"] + d["n"]][:, 0]
+    Cs = xBC[..., d["di"] + d["n"]:][:, 0]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(xs.shape[0], d["nh"], d["p"])  # [B,H,P]
+    h = cache["h"]
+    decay = jnp.exp(dt * A)[..., None, None]
+    h = h * decay + dt[..., None, None] * xh[..., None].astype(jnp.float32) \
+        * Bs[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cs.astype(jnp.float32)).astype(x.dtype)
+    y = y + p["D"].astype(y.dtype)[:, None] * xh
+    y = y.reshape(x.shape[0], 1, d["di"])
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": new_conv.astype(x.dtype)}
+
+
+def ssm_cache_shape(cfg: ArchConfig, batch: int) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    d = ssm_dims(cfg)
+    return {
+        "h": ((batch, d["nh"], d["p"], d["n"]), "float32"),
+        "conv": ((batch, cfg.conv_width - 1, d["conv_dim"]), cfg.dtype),
+    }

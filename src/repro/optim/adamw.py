@@ -1,0 +1,94 @@
+"""Self-contained AdamW with warmup-cosine schedule.
+
+Parameters are stored fp32 and cast to the compute dtype inside the model, so
+the optimizer state is exactly (params, mu, nu) — all sharded identically by
+the logical-axis rules (ZeRO-style: the `embed`->data rule shards storage over
+the data axis on top of tensor parallelism).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "params": params,
+        "mu": zeros,
+        "nu": jax.tree.map(jnp.zeros_like, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def apply_updates(state: Dict[str, Any], grads, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_state, metrics)."""
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        step_dir = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        p = p - lr * (step_dir + cfg.weight_decay * p)
+        return p, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(state["params"])
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    new_state = {
+        "step": step,
+        "params": jax.tree.unflatten(tdef, new_p),
+        "mu": jax.tree.unflatten(tdef, new_mu),
+        "nu": jax.tree.unflatten(tdef, new_nu),
+    }
+    return new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,211 @@
+"""Roofline accounting: hardware constants, analytic model FLOPs, HLO parsing.
+
+Hardware model (TPU v5e-class, per chip):
+  peak bf16 compute 197 TFLOP/s | HBM 819 GB/s | ICI ~50 GB/s per link.
+
+The three terms, per (arch x shape x mesh), all **per chip** (the compiled
+SPMD module is the per-device program, so cost_analysis is per-device):
+
+  compute    = HLO_FLOPs / PEAK_FLOPS
+  memory     = HLO_bytes / HBM_BW
+  collective = collective_bytes / ICI_BW
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSuite, cache_seq_len, token_split
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (formula: collective_bytes/(chips*link_bw))
+
+# ------------------------------------------------------------ HLO parsing
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in optimized HLO text."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # paired with the -start we already counted
+        op = m.group(1)
+        operand_region = line[m.end():]
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(operand_region))
+        if total == 0:
+            # fall back to the output shape (left of '=')
+            lhs = line[: m.start()]
+            total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        out[op] += total
+    return dict(out)
+
+
+# ------------------------------------------------------- HBM traffic model
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[a-z]\d*[a-z]*\d*\[[\d,]*\])")
+_OPND_RE = re.compile(r"%([\w\.\-]+)")
+_NO_TRAFFIC = {"parameter", "constant", "bitcast", "tuple", "get-tuple-element",
+               "convert", "copy", "after-all", "partition-id", "iota"}
+
+
+def hbm_bytes(hlo_text: str) -> float:
+    """TPU-oriented HBM-traffic estimate from optimized HLO: for every
+    top-level (entry) op, count output bytes + operand bytes, skipping ops
+    the TPU performs for free or that the CPU backend inserts artificially
+    (`convert` — the CPU emulates bf16 dots via f32 upcasts; DESIGN.md §3.2).
+    Fusions count only their boundary tensors, matching real HBM traffic.
+    """
+    sizes: dict = {}
+    total = 0.0
+    in_entry = False
+    # pass 1: sizes of every instruction (any computation)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            shp = _SHAPE_RE.search(m.group(2))
+            if shp:
+                sizes[m.group(1)] = _shape_bytes(shp.group(1), shp.group(2))
+    # pass 2: entry-computation traffic
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            in_entry = True
+            continue
+        if in_entry and line.startswith("}"):
+            in_entry = False
+            continue
+        if not in_entry:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        opcode_m = re.match(r"(?:\(?[a-z]\d*[a-z]*\d*\[[\d,]*\]\)?(?:\{[\d,]*\})?\s+)?([\w\-]+)\(", rhs)
+        opcode = opcode_m.group(1) if opcode_m else ""
+        if opcode in _NO_TRAFFIC:
+            continue
+        out_b = sizes.get(m.group(1), 0)
+        paren = rhs[rhs.find("(") + 1: rhs.find(")")] if "(" in rhs else ""
+        operands = _OPND_RE.findall(paren)
+        name = m.group(1)
+        if opcode == "fusion" and len(operands) == 1 and (
+            "convert" in name or name.startswith(("wrapped_slice", "slice_bitcast"))
+        ):
+            # CPU-backend artifacts: bf16<->f32 upcast wrappers (TPU-native
+            # dtype) and leading-dim parameter slices (views on TPU)
+            continue
+        total += out_b + sum(sizes.get(name_, 0) for name_ in operands)
+    return total
+
+
+# --------------------------------------------------------- analytic FLOPs
+
+
+def _flops_params(cfg: ArchConfig) -> int:
+    """Matmul-active parameters (embedding lookup excluded, unembed included)."""
+    n = cfg.n_active_params()
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab * cfg.d_model  # lookup table does no matmul flops
+    return n
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSuite, kind: str) -> float:
+    """Analytic 'useful' FLOPs per step, whole job (divide by chips for/chip).
+
+    train: 6*N*D + attention (causal 12*B*S^2*H*hd per... see DESIGN);
+    MoE uses N_active. Attention/SSM mixer terms included since they dominate
+    the 32k/500k shapes.
+    """
+    b = shape.global_batch
+    front, text = token_split(cfg, shape.seq_len)
+    hd = cfg.resolved_head_dim
+    h = cfg.n_heads
+    L = cfg.n_layers
+
+    if kind == "train":
+        tokens = b * (text + front)
+        mult = 6.0
+    elif kind == "prefill":
+        tokens = b * (text + front)
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = b
+        mult = 2.0
+
+    flops = mult * _flops_params(cfg) * tokens
+
+    # mixer terms
+    if kind in ("train", "prefill"):
+        s = text + (front if not cfg.enc_dec else 0)
+        eff = min(cfg.sliding_window, s) if cfg.sliding_window else s
+        if cfg.has_attention:
+            # fwd = 4*B*S*eff*H*hd (qk+pv), /2 causal; train multiplies by 3
+            a = 2.0 * b * s * eff * h * hd * L
+            if cfg.enc_dec:
+                a = 2.0 * b * front * front * h * hd * cfg.n_enc_layers \
+                    + 2.0 * b * text * text * h * hd * L \
+                    + 4.0 * b * text * front * h * hd * L  # cross (not causal)
+            flops += a * (3.0 if kind == "train" else 1.0)
+        if cfg.ssm or cfg.hybrid:
+            q = cfg.ssm_chunk
+            n = cfg.ssm_state
+            nh, p = cfg.ssm_heads, cfg.ssm_head_dim
+            ssd = 2.0 * b * s * (q * n + q * nh * p + 2.0 * n * nh * p) * L
+            flops += ssd * (3.0 if kind == "train" else 1.0)
+    else:
+        if cfg.has_attention:
+            s_kv = cache_seq_len(cfg, shape)
+            flops += 4.0 * b * s_kv * h * hd * L
+            if cfg.enc_dec:
+                flops += 4.0 * b * shape.seq_len * h * hd * L  # cross over enc
+        if cfg.ssm or cfg.hybrid:
+            flops += 4.0 * b * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * L
+
+    return flops
+
+
+# ---------------------------------------------------------------- terms
+
+
+def terms(per_chip_flops: float, per_chip_bytes: float,
+          coll_bytes: Dict[str, int]) -> Dict[str, float]:
+    total_coll = float(sum(coll_bytes.values()))
+    return {
+        "compute_s": per_chip_flops / PEAK_FLOPS,
+        "memory_s": per_chip_bytes / HBM_BW,
+        "collective_s": total_coll / ICI_BW,
+    }
+
+
+def dominant(t: Dict[str, float]) -> str:
+    return max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])

@@ -1,0 +1,35 @@
+"""Named sharding-layout presets (§Perf findings as first-class configs).
+
+  training  - DP/FSDP + TP: parameters and optimizer state storage-sharded
+              over the data axis (ZeRO) on top of tensor parallelism.
+              Right for train steps: the per-layer weight all-gather
+              amortizes over thousands of tokens per step.
+  serving   - pure TP residency: no data-axis storage sharding. Decode
+              touches every weight once per token, so FSDP re-gathers are
+              pure overhead — §Perf measured 30x (dense 104B) and 110x (MoE)
+              cross-chip traffic reductions from this preset, plus bf16
+              weight residency.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+TRAINING: Optional[Dict] = None  # the DEFAULT_RULES in repro.sharding
+
+SERVING: Dict = {
+    "embed": None,   # no FSDP storage sharding
+    "fsdp": None,
+}
+
+
+def rules_for(layout: str):
+    if layout in ("training", "default"):
+        return TRAINING
+    if layout == "serving":
+        return dict(SERVING)
+    raise ValueError(f"unknown layout {layout!r} (training|serving)")
+
+
+def serving_config_overrides() -> Dict:
+    """ArchConfig overrides that pair with the serving layout."""
+    return {"param_dtype": "bfloat16", "cache_update": "row"}

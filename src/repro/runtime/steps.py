@@ -1,0 +1,132 @@
+"""Step builders: train / prefill / decode with full sharding annotations.
+
+These are the functions the launcher jits and the dry-run lowers — one per
+shape-suite kind. Gradient accumulation (microbatching) runs as a lax.scan so
+each microbatch's gradient reduce-scatter can overlap the next microbatch's
+backward under XLA's latency-hiding scheduler.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSuite, batch_specs, decode_batch_specs
+from repro.models import params as pm
+from repro.models.registry import Model
+from repro.optim import AdamWConfig, apply_updates, init_state
+from repro.sharding import ShardingCtx
+
+
+# ----------------------------------------------------------------- sharding
+
+
+def batch_shardings(ctx: ShardingCtx, specs: Dict[str, jax.ShapeDtypeStruct]):
+    if ctx.mesh is None:
+        return None
+    out = {}
+    for k, v in specs.items():
+        axes = ["batch"] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(ctx.mesh, ctx.spec(axes, v.shape))
+    return out
+
+
+def state_shardings(model: Model):
+    ps = model.param_shardings()
+    if ps is None:
+        return None
+    rep = NamedSharding(model.ctx.mesh, P())
+    return {"step": rep, "params": ps, "mu": ps, "nu": ps}
+
+
+def abstract_state(model: Model):
+    p = model.abstract_params()
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "params": p,
+        "mu": p,
+        "nu": p,
+    }
+
+
+# -------------------------------------------------------------------- train
+
+
+def make_train_step(model: Model, opt: AdamWConfig, *, accum: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def train_step(state, batch):
+        if accum > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(state["params"], mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + loss), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]), batch
+            )
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"], batch)
+        new_state, opt_metrics = apply_updates(state, grads, opt)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt: AdamWConfig, *, accum: int = 1, donate: bool = True):
+    fn = make_train_step(model, opt, accum=accum)
+    ctx = model.ctx
+    if ctx.mesh is None:
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+    ss = state_shardings(model)
+    bs = None  # propagate from input constraint
+    return jax.jit(
+        fn,
+        in_shardings=(ss, bs),
+        out_shardings=(ss, None),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+# -------------------------------------------------------------------- serve
+
+
+def make_prefill_step(model: Model, *, pad_to: Optional[int] = None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, pad_to=pad_to)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return decode_step
+
+
+def jit_decode_step(model: Model, shape: ShapeSuite):
+    fn = make_decode_step(model)
+    ctx = model.ctx
+    if ctx.mesh is None:
+        return jax.jit(fn, donate_argnums=(1,))
+    ps = model.param_shardings()
+    cs = model.cache_shardings(shape)
+    return jax.jit(
+        fn,
+        in_shardings=(ps, cs, None),
+        out_shardings=(None, cs),
+        donate_argnums=(1,),
+    )

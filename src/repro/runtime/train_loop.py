@@ -1,0 +1,96 @@
+"""Training loop: steps + checkpoints + straggler monitor + exact resume."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, MarkovTask
+from repro.models.registry import Model
+from repro.optim import AdamWConfig, init_state
+from repro.optim.compression import ef_compress, init_error_state
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.runtime.steps import make_train_step, state_shardings
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps: int
+    losses: Dict[int, float]
+    resumed_from: Optional[int]
+    straggler_steps: int
+    wall_s: float
+
+
+def train(model: Model, *, steps: int, data_cfg: DataConfig,
+          opt: Optional[AdamWConfig] = None, accum: int = 1,
+          compress_grads: bool = False, ckpt_dir: Optional[str] = None,
+          ckpt_every: int = 50, log_every: int = 10, seed: int = 0,
+          fail_at_step: Optional[int] = None) -> TrainReport:
+    """Run `steps` optimizer steps; resumes exactly from `ckpt_dir` if present.
+
+    `fail_at_step` injects a crash (fault-tolerance tests / demos).
+    """
+    t_start = time.time()
+    opt = opt or AdamWConfig(total_steps=steps)
+    task = MarkovTask(data_cfg)
+
+    if compress_grads:
+        # compress gradients with error feedback before the update
+        def step_fn(state, batch):
+            err = state.pop("grad_error")
+
+            def loss_fn(params, b):
+                loss, m = model.loss(params, b)
+                return loss, m
+
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+            grads, err = ef_compress(grads, err)
+            from repro.optim import apply_updates
+            new_state, om = apply_updates(state, grads, opt)
+            new_state["grad_error"] = err
+            return new_state, {"loss": loss, **om}
+    else:
+        step_fn = make_train_step(model, opt, accum=accum)
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0,))
+
+    # ---- init or resume
+    resumed_from = None
+    params = model.init(jax.random.PRNGKey(seed))
+    state = init_state(params)
+    if compress_grads:
+        state["grad_error"] = init_error_state(params)
+    if ckpt_dir is not None and latest_step(ckpt_dir) is not None:
+        resumed_from = latest_step(ckpt_dir)
+        state = restore(ckpt_dir, state)
+        state = jax.tree.map(jnp.asarray, state)
+
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir is not None else None
+    monitor = StragglerMonitor()
+    losses: Dict[int, float] = {}
+
+    start = int(state["step"])
+    for step in range(start, steps):
+        if fail_at_step is not None and step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in task.batch_for_step(step).items()}
+        with monitor.timed():
+            state, metrics = jit_step(state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            losses[step] = float(metrics["loss"])
+        if ckpt is not None and (step + 1) % ckpt_every == 0:
+            ckpt.save_async(state, step + 1)
+    if ckpt is not None:
+        ckpt.save_async(state, steps)
+        ckpt.wait()
+    return TrainReport(steps=steps, losses=losses, resumed_from=resumed_from,
+                       straggler_steps=len(monitor.flagged),
+                       wall_s=time.time() - t_start)

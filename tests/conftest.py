@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set XLA_FLAGS/device-count here — smoke tests and benches run
+# on the single real CPU device; only launch/dryrun.py forces 512 devices.
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

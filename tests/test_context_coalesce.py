@@ -1,0 +1,84 @@
+"""Property tests: coalescing planner and context classifier (paper §III-B/C)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.context import VarClass, VarSpec, classify, context_bytes, max_depth
+from repro.core.descriptors import apply_plan_reference, dedup_rmw, plan_gather
+
+
+@settings(max_examples=60, deadline=None)
+@given(idx=st.lists(st.integers(0, 127), min_size=0, max_size=200),
+       span=st.sampled_from([2, 4, 8, 16]))
+def test_plan_gather_is_exact_permutation(idx, span):
+    """Every request appears exactly once, in the right output slot."""
+    idx = np.asarray(idx, np.int64)
+    table = np.arange(128 * 4).reshape(128, 4).astype(np.float32)
+    plan = plan_gather(idx, span=span)
+    out = apply_plan_reference(plan, table)
+    np.testing.assert_array_equal(out, table[idx] if len(idx) else out)
+    assert plan.requests_issued() <= max(len(idx), 0) or len(idx) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(run_len=st.integers(1, 64), span=st.sampled_from([4, 8]))
+def test_plan_gather_coalesces_runs(run_len, span):
+    idx = np.arange(run_len)
+    plan = plan_gather(idx, span=span)
+    assert plan.n_spans == run_len // span
+    assert plan.n_singles == run_len % span
+
+
+@settings(max_examples=40, deadline=None)
+@given(idx=st.lists(st.integers(0, 31), min_size=1, max_size=60))
+def test_dedup_rmw_preserves_scatter_sum(idx):
+    idx = np.asarray(idx, np.int64)
+    upd = np.random.RandomState(0).randn(len(idx), 3)
+    uniq, summed = dedup_rmw(idx, upd)
+    assert len(np.unique(uniq)) == len(uniq)
+    direct = np.zeros((32, 3))
+    np.add.at(direct, idx, upd)
+    via = np.zeros((32, 3))
+    via[uniq] += summed
+    np.testing.assert_allclose(direct, via, atol=1e-12)
+
+
+# ------------------------------------------------------------ context rules
+
+
+def test_classification_matches_paper_rules():
+    assert classify(VarSpec("ro", 8, read_only=True)) is VarClass.SHARED
+    assert classify(VarSpec("priv", 8)) is VarClass.PRIVATE
+    assert classify(VarSpec("acc", 8, carries_dependence=True,
+                            commutative=True)) is VarClass.SHARED
+    assert classify(VarSpec("seq", 8, carries_dependence=True)) is VarClass.SEQUENTIAL
+    assert classify(VarSpec("hint", 8, hint=VarClass.SHARED)) is VarClass.SHARED
+
+
+@settings(max_examples=40, deadline=None)
+@given(depth=st.integers(1, 512),
+       specs=st.lists(
+           st.builds(VarSpec,
+                     name=st.text(min_size=1, max_size=4),
+                     nbytes=st.integers(1, 4096),
+                     read_only=st.booleans(),
+                     carries_dependence=st.booleans(),
+                     commutative=st.booleans()),
+           min_size=1, max_size=8))
+def test_optimized_context_never_larger(depth, specs):
+    opt = context_bytes(specs, depth)
+    base = context_bytes(specs, depth, baseline=True)
+    assert opt <= base
+    # and therefore the reachable depth never shrinks
+    budget = base + 1
+    assert max_depth(specs, budget) >= max_depth(specs, budget, baseline=True)
+
+
+@settings(max_examples=30, deadline=None)
+@given(budget=st.integers(0, 1 << 20),
+       specs=st.lists(
+           st.builds(VarSpec, name=st.just("v"), nbytes=st.integers(1, 1024)),
+           min_size=1, max_size=5))
+def test_max_depth_fits_budget(budget, specs):
+    d = max_depth(specs, budget)
+    if d > 0:
+        assert context_bytes(specs, d) <= budget

@@ -1,0 +1,28 @@
+"""Mini dry-run in a subprocess (8 forced host devices; the production
+512-device sweep runs the same code via launch/dryrun.py)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_mini_dryrun_cell(tmp_path):
+    env = dict(os.environ, REPRO_DRYRUN_DEVICES="8",
+               PYTHONPATH=str(ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "granite-moe-1b-a400m", "--shape", "decode_32k",
+         "--mesh", "mini", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads((tmp_path / "granite-moe-1b-a400m__decode_32k__mini.json").read_text())
+    assert rec["status"] == "ok"
+    assert rec["hlo_flops_per_chip"] > 0
+    assert rec["terms"]["memory_s"] > 0
+    assert rec["dominant"] in ("compute_s", "memory_s", "collective_s")

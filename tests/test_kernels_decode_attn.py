@@ -1,0 +1,41 @@
+"""Flash-decode kernel: position sweep, GQA/MQA ratios, block sizes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@pytest.mark.parametrize("kh,h", [(2, 8), (1, 4), (4, 4)])
+@pytest.mark.parametrize("pos", [0, 63, 200, 255])
+def test_decode_attention_matches_ref(rng, kh, h, pos):
+    B, D, S = 2, 16, 256
+    q = jnp.asarray(rng.randn(B, h, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, kh, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, kh, D), jnp.float32)
+    out = decode_attention(q, k, v, pos, blk=64)
+    ref = decode_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("blk,depth", [(32, 2), (64, 4), (128, 8)])
+def test_decode_attention_block_depth_sweep(rng, blk, depth):
+    B, h, kh, D, S = 2, 4, 2, 16, 256
+    q = jnp.asarray(rng.randn(B, h, D), jnp.float32)
+    k = jnp.asarray(rng.randn(B, S, kh, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, kh, D), jnp.float32)
+    out = decode_attention(q, k, v, 170, blk=blk, depth=depth)
+    ref = decode_attention_ref(q, k, v, 170)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_bf16(rng):
+    B, h, kh, D, S = 1, 4, 2, 32, 128
+    q = jnp.asarray(rng.randn(B, h, D), jnp.bfloat16)
+    k = jnp.asarray(rng.randn(B, S, kh, D), jnp.bfloat16)
+    v = jnp.asarray(rng.randn(B, S, kh, D), jnp.bfloat16)
+    out = decode_attention(q, k, v, 100, blk=32)
+    ref = decode_attention_ref(q, k, v, 100)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2)

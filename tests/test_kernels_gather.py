@@ -1,0 +1,46 @@
+"""coro_gather kernel: allclose vs oracle across shapes/dtypes (+ coalescing)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.coro_gather.ops import coalesced_gather, coro_gather
+from repro.kernels.coro_gather.ref import gather_ref
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("n_rows,d,n_idx", [(64, 128, 32), (256, 256, 61), (128, 8, 16)])
+def test_row_gather_matches_ref(rng, dtype, n_rows, d, n_idx):
+    table = jnp.asarray(rng.randn(n_rows, d) * 10, dtype)
+    idx = jnp.asarray(rng.randint(0, n_rows, n_idx), jnp.int32)
+    out = coro_gather(table, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gather_ref(table, idx)))
+
+
+@pytest.mark.parametrize("depth", [1, 2, 3, 8])
+@pytest.mark.parametrize("rows_per_tile", [1, 4, 8])
+def test_row_gather_depth_tile_sweep(rng, depth, rows_per_tile):
+    table = jnp.asarray(rng.randn(128, 64), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 128, 48), jnp.int32)
+    out = coro_gather(table, idx, depth=depth, rows_per_tile=rows_per_tile)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gather_ref(table, idx)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    idx=st.lists(st.integers(0, 63), min_size=1, max_size=80),
+    span=st.sampled_from([2, 4, 8]),
+)
+def test_coalesced_gather_matches_direct(idx, span):
+    table = jnp.asarray(np.arange(64 * 16, dtype=np.float32).reshape(64, 16))
+    idx = np.asarray(idx, np.int32)
+    out, plan = coalesced_gather(table, idx, span=span)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table)[idx])
+    assert plan.requests_issued() <= plan.n_requests or plan.n_requests == 0
+
+
+def test_coalescing_saves_requests_on_streams():
+    table = jnp.zeros((512, 8), jnp.float32)
+    out, plan = coalesced_gather(table, np.arange(256), span=8)
+    assert plan.n_spans == 32 and plan.n_singles == 0
+    assert plan.coalescing_ratio() == 32 / 256

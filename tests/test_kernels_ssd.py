@@ -1,0 +1,32 @@
+"""SSD-scan kernel vs the sequential recurrence oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def _inputs(rng, b, s, nh, p, n, dtype=jnp.float32):
+    return (jnp.asarray(rng.randn(b, s, nh, p), dtype),
+            jnp.asarray(rng.rand(b, s, nh) * 0.5 + 0.1, dtype),
+            jnp.asarray(-np.exp(rng.randn(nh) * 0.3), jnp.float32),
+            jnp.asarray(rng.randn(b, s, n), dtype),
+            jnp.asarray(rng.randn(b, s, n), dtype))
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_ssd_scan_matches_sequential(rng, chunk):
+    x, dt, A, B, C = _inputs(rng, 2, 128, 3, 8, 16)
+    y, hf = ssd(x, dt, A, B, C, chunk=chunk)
+    yr, hr = ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("nh,p,n", [(1, 4, 8), (4, 16, 32)])
+def test_ssd_scan_shape_sweep(rng, nh, p, n):
+    x, dt, A, B, C = _inputs(rng, 1, 64, nh, p, n)
+    y, hf = ssd(x, dt, A, B, C, chunk=16)
+    yr, hr = ssd_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-4, atol=3e-4)

@@ -1,0 +1,18 @@
+"""STREAM-triad kernel vs oracle (load+store pipeline)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.stream_copy.ops import stream_triad
+from repro.kernels.stream_copy.ref import triad_ref
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize("n,d,rows,depth", [(256, 32, 64, 2), (512, 16, 128, 4)])
+def test_triad_matches_ref(rng, dtype, tol, n, d, rows, depth):
+    b = jnp.asarray(rng.randn(n, d), dtype)
+    c = jnp.asarray(rng.randn(n, d), dtype)
+    out = stream_triad(b, c, 3.0, rows=rows, depth=depth)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(triad_ref(b, c, 3.0), np.float32),
+                               rtol=tol, atol=tol)

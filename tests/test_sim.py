@@ -1,0 +1,110 @@
+"""The paper's numeric claims hold in the calibrated model (±15%),
+plus structural invariants (hypothesis)."""
+import statistics
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sim
+
+
+def within(x, target, tol=0.15):
+    return abs(x - target) / target <= tol
+
+
+# ---------------------------------------------------------- headline claims
+
+
+def test_full_system_average_200ns():
+    assert within(sim.average_speedup("coroamu-full", latency_ns=200), 3.39)
+
+
+def test_full_system_average_800ns():
+    assert within(sim.average_speedup("coroamu-full", latency_ns=800), 4.87)
+
+
+def test_gups_peak_speedups():
+    g = sim.BENCHES["GUPS"]
+    assert within(sim.speedup("coroamu-full", g, latency_ns=200), 29.0)
+    assert within(sim.speedup("coroamu-full", g, latency_ns=800), 59.8)
+
+
+def test_x86_compiler_study():
+    for lat, sota, ours in ((90, 1.40, 2.11), (130, 2.01, 2.78)):
+        co = sim.average_speedup("coroutine", latency_ns=lat, ua=sim.SKYLAKE,
+                                 tune_coros=True)
+        cs = sim.average_speedup("coroamu-s", latency_ns=lat, ua=sim.SKYLAKE,
+                                 tune_coros=True)
+        assert within(co, sota), (lat, co)
+        assert within(cs, ours), (lat, cs)
+        assert cs > co  # the compiler beats hand-written coroutines
+
+
+def test_coroamu_d_mispredict_over_15_percent():
+    ms = statistics.mean(
+        sim.simulate("coroamu-d", b, latency_ns=200, n_coros=96).breakdown["mispredict"]
+        for b in sim.BENCHES.values())
+    assert ms > 0.15
+
+
+def test_bafin_removes_mispredicts_and_helps():
+    for b in sim.BENCHES.values():
+        d = sim.simulate("coroamu-d", b, latency_ns=200, n_coros=96)
+        f = sim.simulate("coroamu-full", b, latency_ns=200, n_coros=96,
+                         ctx_opt=False, coalesce=False)
+        assert f.breakdown["mispredict"] == 0.0
+        assert f.cycles_per_iter <= d.cycles_per_iter
+
+
+def test_mlp_claims():
+    g = sim.BENCHES["GUPS"]
+    assert sim.simulate("serial", g, latency_ns=800).mlp < 5
+    assert sim.simulate("coroamu-s", g, latency_ns=800, n_coros=96).mlp < 20
+    assert sim.simulate("coroamu-full", g, latency_ns=800, n_coros=96).mlp >= 50
+
+
+def test_instruction_expansion_ordering():
+    e = sim.EXPANSION
+    assert e["coroamu-s"] > e["coroamu-d"] > e["coroamu-full"] > 1.0
+    assert e["coroamu-s"] == 6.70 and e["coroamu-d"] == 5.98 and e["coroamu-full"] == 3.91
+
+
+def test_compiler_opts_help_where_paper_says():
+    """Fig. 15: context opt helps GUPS/IS/HJ; aggregation helps mcf/HJ/lbm/STREAM."""
+    for name in ("GUPS", "IS", "HJ"):
+        b = sim.BENCHES[name]
+        base = sim.simulate("coroamu-full", b, latency_ns=100, n_coros=96,
+                            ctx_opt=False, coalesce=False).cycles_per_iter
+        opt = sim.simulate("coroamu-full", b, latency_ns=100, n_coros=96,
+                           ctx_opt=True, coalesce=False).cycles_per_iter
+        assert opt <= base
+    for name in ("mcf", "HJ", "lbm", "STREAM"):
+        b = sim.BENCHES[name]
+        base = sim.simulate("coroamu-full", b, latency_ns=100, n_coros=96,
+                            ctx_opt=True, coalesce=False).cycles_per_iter
+        agg = sim.simulate("coroamu-full", b, latency_ns=100, n_coros=96,
+                           ctx_opt=True, coalesce=True).cycles_per_iter
+        assert agg < base
+
+
+# ------------------------------------------------------------- invariants
+
+
+@settings(max_examples=40, deadline=None)
+@given(lat=st.floats(100, 1000), n=st.integers(2, 512),
+       bench=st.sampled_from(sorted(sim.BENCHES)),
+       variant=st.sampled_from(sim.VARIANTS))
+def test_sim_invariants(lat, n, bench, variant):
+    r = sim.simulate(variant, sim.BENCHES[bench], latency_ns=lat, n_coros=n)
+    assert r.cycles_per_iter > 0
+    assert 0 <= r.mlp <= max(n, sim.NH_G.amu_inflight, 64) + 1
+    assert all(v >= 0 for v in r.breakdown.values())
+
+
+@settings(max_examples=20, deadline=None)
+@given(bench=st.sampled_from(sorted(sim.BENCHES)))
+def test_serial_monotone_in_latency(bench):
+    b = sim.BENCHES[bench]
+    ts = [sim.simulate("serial", b, latency_ns=l).cycles_per_iter
+          for l in (100, 200, 400, 800)]
+    assert ts == sorted(ts)
