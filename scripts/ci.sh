@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# One command to check the suite's green state.
+#
+#   scripts/ci.sh        -> fast lane (-m "not slow") then the tier-1 command
+#   scripts/ci.sh fast   -> fast lane only
+#
+# The tier-1 command (ROADMAP.md): PYTHONPATH=src python -m pytest -x -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== fast lane: python -m pytest -q -m 'not slow' =="
+python -m pytest -q -m "not slow"
+
+if [[ "${1:-}" == "fast" ]]; then
+    exit 0
+fi
+
+echo "== tier-1: python -m pytest -x -q =="
+python -m pytest -x -q

@@ -1,0 +1,192 @@
+"""Latency-aware depth autotuning for the coroutine kernels (CoroAMU §III-D).
+
+This module is the glue between the depth solver (`core.schedule`) and the
+kernel entry points (`kernels/*/ops.py`): every kernel family describes one
+in-flight tile as a `TileProfile` (bytes DMA'd, flops after resumption, and
+the VMEM its slot occupies), and `choose_depth` turns that profile into the
+pipeline depth — the software analogue of the paper's Return-Block dynamic
+scheduler picking how many coroutines to keep in flight.
+
+Two paths:
+
+* static solve — `choose_depth(profile)` with no recorded samples returns
+  exactly `schedule.solve_depth(profile)`: the smallest depth that hides the
+  modelled HBM latency, capped by the VMEM budget. Kernel entry points call
+  this when invoked with ``depth=None``.
+* run-time feedback — `record_transfer(kernel, seconds)` accumulates
+  measured per-tile transfer latencies (benchmarks/kernel_bench.py feeds
+  this); once samples exist for a kernel key, `choose_depth` re-solves from
+  the observed tail latency via `schedule.adaptive_depth`, adapting the
+  schedule to the latency actually seen instead of the data-sheet constant.
+
+`last_choice(kernel)` exposes the most recent decision so benchmarks and
+tests can report/assert the depth a ``depth=None`` call actually used.
+
+API stability note: `TileProfile` is defined in `core.schedule` and
+re-exported here; profiles for the five kernel families are built by the
+``profile_*`` helpers below so tests and benchmarks construct the exact
+profile a kernel entry point uses.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional
+
+from repro.core.schedule import (
+    HBM_LATENCY_S,
+    VMEM_BYTES,
+    TileProfile,
+    adaptive_depth,
+    solve_depth,
+)
+
+__all__ = [
+    "TileProfile",
+    "choose_depth",
+    "clear_samples",
+    "last_choice",
+    "profile_decode",
+    "profile_gmm",
+    "profile_row_gather",
+    "profile_scatter_add",
+    "profile_span_gather",
+    "profile_ssd",
+    "profile_triad",
+    "record_transfer",
+    "transfer_samples",
+]
+
+_lock = threading.Lock()
+_transfer_samples: Dict[str, List[float]] = {}
+_last_choice: Dict[str, int] = {}
+
+
+# ------------------------------------------------------- per-kernel profiles
+#
+# flops_per_tile models the post-resumption work per element: pure data
+# movement counts ~1 op/element (gather/triad), matmul tiles count 2*M*K*N.
+
+
+def profile_row_gather(rows_per_tile: int, d: int, itemsize: int) -> TileProfile:
+    """One tile = `rows_per_tile` single-row DMAs (an aset group)."""
+    return TileProfile(
+        tile_bytes=rows_per_tile * d * itemsize,
+        flops_per_tile=float(rows_per_tile * d),
+    )
+
+
+def profile_span_gather(span: int, d: int, itemsize: int) -> TileProfile:
+    """One tile = one coarse-grained span DMA (paper §III-C case 1)."""
+    return TileProfile(
+        tile_bytes=span * d * itemsize,
+        flops_per_tile=float(span * d),
+    )
+
+
+def profile_scatter_add(rows_per_tile: int, d: int, itemsize: int) -> TileProfile:
+    """RMW tile: rows are loaded AND stored (2x bytes), and each slot holds
+    separate in/out buffers — tile_bytes doubles as both the traffic and the
+    per-slot VMEM footprint."""
+    return TileProfile(
+        tile_bytes=2 * rows_per_tile * d * itemsize,
+        flops_per_tile=float(2 * rows_per_tile * d),
+    )
+
+
+def profile_decode(blk: int, kh: int, g: int, d: int, itemsize: int) -> TileProfile:
+    """KV block tile: k+v DMAs per slot; accumulators are depth-independent."""
+    h = kh * g
+    return TileProfile(
+        tile_bytes=2 * blk * kh * d * itemsize,
+        flops_per_tile=float(4 * blk * h * d),  # qk + pv per block
+        shared_bytes=4 * (kh * g * (d + 2) + h * d),  # acc/m/l + q (f32)
+    )
+
+
+def profile_triad(rows: int, d: int, itemsize: int) -> TileProfile:
+    """STREAM tile: two loads plus one store per slot (three slot buffers)."""
+    return TileProfile(
+        tile_bytes=3 * rows * d * itemsize,
+        flops_per_tile=float(2 * rows * d),  # fma per element
+    )
+
+
+def profile_gmm(c: int, dm: int, f_tile: int, itemsize: int,
+                *, f_total: int | None = None) -> TileProfile:
+    """Streamed expert-weight tile; the token block AND the expert's full
+    [c, f] output block are depth-independent VMEM residents."""
+    return TileProfile(
+        tile_bytes=dm * f_tile * itemsize,
+        flops_per_tile=float(2 * c * dm * f_tile),
+        shared_bytes=(c * dm + c * (f_total or f_tile)) * itemsize,
+    )
+
+
+def profile_ssd(chunk: int, nh: int, p: int, n: int, itemsize: int,
+                *, seq_len: int | None = None) -> TileProfile:
+    """Chunk tile: x/dt/B/C stream per slot; the recurrent state is
+    sequential (one copy, depth-independent — core.context's SEQUENTIAL
+    class) and the per-batch [seq, nh, p] y block is a shared resident."""
+    return TileProfile(
+        tile_bytes=chunk * (nh * p + nh + 2 * n) * itemsize,
+        flops_per_tile=float(2 * chunk * chunk * (n + nh * p)),
+        # f32 state + f32 h-out block + y output block
+        shared_bytes=8 * nh * p * n + (seq_len or chunk) * nh * p * itemsize,
+    )
+
+
+# ------------------------------------------------------- run-time feedback
+
+
+def record_transfer(kernel: str, seconds: float) -> None:
+    """Feed one measured per-tile transfer latency into the feedback loop."""
+    with _lock:
+        _transfer_samples.setdefault(kernel, []).append(float(seconds))
+
+
+def transfer_samples(kernel: str) -> List[float]:
+    with _lock:
+        return list(_transfer_samples.get(kernel, ()))
+
+
+def clear_samples(kernel: Optional[str] = None) -> None:
+    with _lock:
+        if kernel is None:
+            _transfer_samples.clear()
+        else:
+            _transfer_samples.pop(kernel, None)
+
+
+def last_choice(kernel: str) -> Optional[int]:
+    """Depth chosen by the most recent ``depth=None`` call for `kernel`."""
+    with _lock:
+        return _last_choice.get(kernel)
+
+
+# ------------------------------------------------------------- the decision
+
+
+def choose_depth(
+    profile: TileProfile,
+    *,
+    kernel: Optional[str] = None,
+    latency_s: float = HBM_LATENCY_S,
+    vmem_budget: int = VMEM_BYTES,
+) -> int:
+    """Solve the pipeline depth for one kernel call.
+
+    With no recorded samples for `kernel` this is exactly
+    ``schedule.solve_depth(profile, latency_s=latency_s,
+    vmem_budget=vmem_budget)`` — latency covered, VMEM capped, floor of 2.
+    With samples (see `record_transfer`) it re-solves from the observed
+    tail latency instead (`schedule.adaptive_depth`).
+    """
+    samples = transfer_samples(kernel) if kernel else []
+    if samples:
+        depth = adaptive_depth(profile, samples, vmem_budget=vmem_budget)
+    else:
+        depth = solve_depth(profile, latency_s=latency_s, vmem_budget=vmem_budget)
+    if kernel is not None:
+        with _lock:
+            _last_choice[kernel] = depth
+    return depth

@@ -33,6 +33,8 @@ def coro_loop(
     consume_fn: Callable[[Any, Any, Any], Any],
     wait_fn: Callable[[Any, Any], None],
     carry_init: Any = 0,
+    *,
+    grid_step: Any = None,
 ):
     """Run the coroutine pipeline over `n_tiles` with `depth` in flight.
 
@@ -44,16 +46,29 @@ def coro_loop(
 
     `n_tiles`/`depth` are Python ints (grid is static); `tile`/`slot` are
     traced int32 inside the steady-state loop.
+
+    Two drive modes share the one rotation (warmup / wait / consume /
+    recycle) so no kernel re-implements the schedule:
+
+    * fori mode (`grid_step=None`, default): the whole pipeline runs inside
+      one kernel invocation via `jax.lax.fori_loop` over all tiles
+      (decode_attention, moe_gmm, ssd_scan).
+    * grid mode (`grid_step=pl.program_id(...)`): the Pallas grid supplies
+      the tile loop — each grid step executes exactly one pipeline step for
+      tile `grid_step`, relying on VMEM scratch persisting across steps.
+      Warmup runs once under `pl.when(grid_step == 0)`
+      (coro_gather, coro_scatter_add, stream_copy).
     """
     depth = min(depth, n_tiles)
     if depth <= 0:
         return carry_init
 
-    # warmup: launch the initial coroutine batch (paper's Init Block)
-    for t in range(depth):
-        issue_fn(t, t)
+    def warmup():
+        # launch the initial coroutine batch (paper's Init Block)
+        for t in range(depth):
+            issue_fn(t, t)
 
-    def body(t, carry):
+    def step(t, carry):
         slot = jax.lax.rem(t, depth)
         # resume the coroutine whose data has arrived (bafin: the schedule is
         # compile-time so the "jump" costs nothing)
@@ -67,7 +82,15 @@ def coro_loop(
 
         return carry
 
-    return jax.lax.fori_loop(0, n_tiles, body, carry_init)
+    if grid_step is None:
+        warmup()
+        return jax.lax.fori_loop(0, n_tiles, step, carry_init)
+
+    @pl.when(grid_step == 0)
+    def _():
+        warmup()
+
+    return step(grid_step, carry_init)
 
 
 # ------------------------------------------------------------- DMA helpers

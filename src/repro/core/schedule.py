@@ -24,6 +24,9 @@ VMEM_BYTES = 128 * 1024 * 1024
 HBM_LATENCY_S = 700e-9          # HBM round-trip seen by a DMA
 HBM_BW = 819e9
 PEAK_FLOPS = 197e12
+# the paper's "capped only by SPM request slots": outstanding-DMA bound per
+# pipeline. Also keeps the kernels' Python-unrolled warmup loops bounded.
+REQUEST_SLOTS = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,18 +48,31 @@ def tile_transfer_s(p: TileProfile) -> float:
 
 
 def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
-                vmem_budget: int = VMEM_BYTES) -> int:
-    """Smallest depth that hides `latency_s`, capped by the VMEM budget.
+                vmem_budget: int = VMEM_BYTES,
+                slot_limit: int = REQUEST_SLOTS) -> int:
+    """Smallest depth that hides `latency_s`, capped by VMEM and slot count.
 
     Hiding condition (paper §II insight, adapted): while one tile's DMA is in
-    flight (latency + transfer), the other depth-1 slots must supply enough
-    compute:  (depth-1) * t_compute >= latency + t_transfer.
+    flight (latency + transfer), the other depth-1 slots must keep the
+    machine busy. A slot's steady-state service time is bounded below by its
+    compute AND by its own transfer (in-flight DMAs overlap, so transfer
+    time is supplied concurrently — the paper's MLP argument), giving
+
+        (depth-1) * max(t_compute, t_transfer) >= latency + t_transfer.
+
+    For compute-rich tiles this reduces to the classic compute-hiding bound;
+    for pure data movement it solves to the MLP that saturates HBM bandwidth
+    at the given latency instead of diverging. `slot_limit` is the SPM
+    request-slot bound the paper's dynamic scheduler is capped by (unlike
+    the static baseline's MSHR cap it is a property of the pipeline's own
+    context arena, not the core) — it also bounds the unrolled warmup code.
     """
     tc = max(tile_compute_s(p), 1e-12)
-    need = math.ceil((latency_s + tile_transfer_s(p)) / tc) + 1
+    service = max(tc, tile_transfer_s(p))
+    need = math.ceil((latency_s + tile_transfer_s(p)) / service) + 1
     per_slot = p.tile_bytes + p.private_bytes
     cap = max((vmem_budget - p.shared_bytes) // max(per_slot, 1), 1)
-    return int(max(2, min(need, cap)))
+    return int(max(2, min(need, cap, slot_limit)))
 
 
 def achieved_bandwidth(p: TileProfile, depth: int,
@@ -75,13 +91,15 @@ def achieved_bandwidth(p: TileProfile, depth: int,
 
 def adaptive_depth(p: TileProfile, latency_samples_s: Sequence[float],
                    *, quantile: float = 0.95,
-                   vmem_budget: int = VMEM_BYTES) -> int:
+                   vmem_budget: int = VMEM_BYTES,
+                   slot_limit: int = REQUEST_SLOTS) -> int:
     """Dynamic-scheduler analogue: re-solve depth from observed latencies."""
     if not latency_samples_s:
-        return solve_depth(p, vmem_budget=vmem_budget)
+        return solve_depth(p, vmem_budget=vmem_budget, slot_limit=slot_limit)
     xs = sorted(latency_samples_s)
     q = xs[min(int(quantile * len(xs)), len(xs) - 1)]
-    return solve_depth(p, latency_s=q, vmem_budget=vmem_budget)
+    return solve_depth(p, latency_s=q, vmem_budget=vmem_budget,
+                       slot_limit=slot_limit)
 
 
 def static_prefetch_depth(p: TileProfile, *, latency_s: float,

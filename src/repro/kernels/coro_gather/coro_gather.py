@@ -3,13 +3,16 @@
 The paper's flagship pattern (GUPS read side, hash-join probe, embedding
 lookup). Each grid step consumes one tile of `rows_per_tile` gathered rows;
 `depth` tiles are in flight at once, each tile's rows being an `aset` group
-of row-DMAs bound to one slot semaphore. The schedule is the mispredict-free
-rotation of DESIGN.md §2.1.
+of row-DMAs bound to one slot semaphore. Both variants drive
+`core.coro.coro_loop` in grid mode — the warmup/rotation schedule lives in
+the substrate, only the issue/wait/consume callbacks differ:
 
-Two variants:
-  * row gather  — one DMA per requested row (uncoalesced).
+  * row gather  — one DMA per requested row (uncoalesced aset group).
   * span gather — one DMA per `span` contiguous rows (the coarse-grained
     request of §III-C; fed by core.descriptors.plan_gather).
+
+With ``depth=None`` the entry points solve the depth from the tile's
+profile via core.autotune (latency-aware, VMEM-capped).
 """
 from __future__ import annotations
 
@@ -20,13 +23,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coro import coro_loop, issue_rows, wait_rows
+from repro.core import autotune
+from repro.core.coro import coro_loop, issue_rows, wait_block, wait_rows
 
 
 def _row_gather_kernel(idx_ref, table_ref, out_ref, slots, sems, *,
                        depth: int, rows_per_tile: int, n_tiles: int):
-    i = pl.program_id(0)
-
     def issue(tile, slot):
         rows = [idx_ref[tile * rows_per_tile + j] for j in range(rows_per_tile)]
         issue_rows(table_ref, rows, slots.at[slot], sems.at[slot])
@@ -34,28 +36,24 @@ def _row_gather_kernel(idx_ref, table_ref, out_ref, slots, sems, *,
     def wait(tile, slot):
         wait_rows(slots.at[slot], sems.at[slot], rows_per_tile)
 
-    # warmup once (scratch persists across grid steps)
-    @pl.when(i == 0)
-    def _():
-        for t in range(min(depth, n_tiles)):
-            issue(t, t)
+    def consume(tile, slot, carry):
+        out_ref[...] = slots[slot]
+        return carry
 
-    slot = jax.lax.rem(i, depth)
-    wait(i, slot)
-    out_ref[...] = slots[slot]
-
-    @pl.when(i + depth < n_tiles)
-    def _():
-        issue(i + depth, slot)
+    coro_loop(n_tiles, depth, issue, consume, wait, grid_step=pl.program_id(0))
 
 
-def row_gather(table, idx, *, depth: int = 4, rows_per_tile: int = 8,
+def row_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
                interpret: bool = True):
     """out[i] = table[idx[i]]. idx length must divide into rows_per_tile."""
     n = idx.shape[0]
     assert n % rows_per_tile == 0, (n, rows_per_tile)
     n_tiles = n // rows_per_tile
     d = table.shape[1]
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_row_gather(rows_per_tile, d, table.dtype.itemsize),
+            kernel="row_gather")
     depth = min(depth, n_tiles)
 
     kernel = functools.partial(
@@ -82,8 +80,6 @@ def row_gather(table, idx, *, depth: int = 4, rows_per_tile: int = 8,
 
 def _span_gather_kernel(starts_ref, table_ref, out_ref, slots, sems, *,
                         depth: int, span: int, n_tiles: int):
-    i = pl.program_id(0)
-
     def issue(tile, slot):
         pltpu.make_async_copy(
             table_ref.at[pl.ds(starts_ref[tile], span)],
@@ -91,25 +87,25 @@ def _span_gather_kernel(starts_ref, table_ref, out_ref, slots, sems, *,
             sems.at[slot],
         ).start()
 
-    @pl.when(i == 0)
-    def _():
-        for t in range(min(depth, n_tiles)):
-            issue(t, t)
+    def wait(tile, slot):
+        wait_block(slots.at[slot], sems.at[slot])
 
-    slot = jax.lax.rem(i, depth)
-    pltpu.make_async_copy(slots.at[slot], slots.at[slot], sems.at[slot]).wait()
-    out_ref[...] = slots[slot]
+    def consume(tile, slot, carry):
+        out_ref[...] = slots[slot]
+        return carry
 
-    @pl.when(i + depth < n_tiles)
-    def _():
-        issue(i + depth, slot)
+    coro_loop(n_tiles, depth, issue, consume, wait, grid_step=pl.program_id(0))
 
 
-def span_gather(table, starts, *, span: int = 8, depth: int = 4,
+def span_gather(table, starts, *, span: int = 8, depth: int | None = None,
                 interpret: bool = True):
     """out[i*span:(i+1)*span] = table[starts[i]:starts[i]+span]."""
     n_tiles = starts.shape[0]
     d = table.shape[1]
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_span_gather(span, d, table.dtype.itemsize),
+            kernel="span_gather")
     depth = min(depth, max(n_tiles, 1))
     if n_tiles == 0:
         return jnp.zeros((0, d), table.dtype)

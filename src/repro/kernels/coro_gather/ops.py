@@ -1,4 +1,12 @@
-"""Public ops for the coroutine gather: padding, coalescing, autodepth."""
+"""Public ops for the coroutine gather: padding, coalescing, auto-depth.
+
+``depth=None`` on either entry point solves the pipeline depth from the
+tile's `TileProfile` via core.autotune (= `schedule.solve_depth` until
+transfer samples are recorded — see autotune.record_transfer). The
+coalesced path threads the same auto-depth into both sub-pipelines, so
+span DMAs and single-row aset groups share one tuned substrate codepath
+(`core.coro.coro_loop`).
+"""
 from __future__ import annotations
 
 import functools
@@ -8,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descriptors import GatherPlan, plan_gather
-from repro.core.schedule import TileProfile, solve_depth
 from repro.kernels.coro_gather.coro_gather import row_gather, span_gather
 
 
@@ -16,22 +23,11 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def auto_depth(rows_per_tile: int, d: int, itemsize: int, *, flops_per_row: float = 64.0) -> int:
-    """Latency-aware depth (CoroAMU dynamic-scheduler analogue)."""
-    p = TileProfile(
-        tile_bytes=rows_per_tile * d * itemsize,
-        flops_per_tile=flops_per_row * rows_per_tile,
-    )
-    return min(solve_depth(p), 16)
-
-
 def coro_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
                 interpret: bool | None = None):
     """Pipelined gather; pads the index stream to a tile multiple."""
     interpret = (not _on_tpu()) if interpret is None else interpret
     n = idx.shape[0]
-    if depth is None:
-        depth = auto_depth(rows_per_tile, table.shape[1], table.dtype.itemsize)
     pad = (-n) % rows_per_tile
     idx_p = jnp.pad(idx, (0, pad)) if pad else idx
     out = row_gather(table, idx_p.astype(jnp.int32), depth=depth,
@@ -45,13 +41,13 @@ def coalesced_gather(table, idx: np.ndarray, *, span: int = 8,
 
     `idx` is host data (the plan is a compile-time pass, like the paper's
     greedy basic-block scheduling). Returns (out, plan) so callers can report
-    the coalescing ratio.
+    the coalescing ratio. Both sub-pipelines ride `coro_loop`; each solves
+    its own depth when `depth` is None (span tiles and row tiles have
+    different profiles).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     plan = plan_gather(np.asarray(idx), span=span)
     d = table.shape[1]
-    if depth is None:
-        depth = auto_depth(span, d, table.dtype.itemsize)
     parts = []
     if plan.n_spans:
         parts.append(span_gather(table, jnp.asarray(plan.span_starts),

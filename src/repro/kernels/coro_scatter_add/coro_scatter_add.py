@@ -3,6 +3,11 @@
 GUPS's update side (and embedding-gradient / histogram scatter). Each tile:
   aload rows -> wait -> add updates -> astore rows -> (slot reused later)
 
+The warmup/rotation schedule is `core.coro.coro_loop` in grid mode; the
+RMW-specific store pipeline lives in the consume callback (drain the slot's
+previous store, compute, start the new store) plus an epilogue drain after
+the rotation retires.
+
 Hazards:
   * duplicate rows across in-flight tiles would race; the paper serializes
     with await/asignal locks — our compile-time analogue is the sort+dedup
@@ -24,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.coro import issue_rows, wait_rows
+from repro.core import autotune
+from repro.core.coro import coro_loop, issue_rows, wait_rows
 
 
 def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref, in_slots,
@@ -54,25 +60,20 @@ def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref, in_slots,
                 store_sems.at[slot],
             ).wait()
 
-    @pl.when(i == 0)
-    def _():
-        for t in range(min(depth, n_tiles)):
-            issue_load(t, t)
+    def wait_load(tile, slot):
+        wait_rows(in_slots.at[slot], load_sems.at[slot], rows_per_tile)
 
-    slot = jax.lax.rem(i, depth)
-    wait_rows(in_slots.at[slot], load_sems.at[slot], rows_per_tile)
+    def consume(tile, slot, carry):
+        # drain the slot's previous store before rewriting its output buffer
+        @pl.when(tile >= depth)
+        def _():
+            wait_store(slot)
 
-    # drain the slot's previous store before rewriting its output buffer
-    @pl.when(i >= depth)
-    def _():
-        wait_store(slot)
+        out_slots[slot] = in_slots[slot] + upd_ref[...]
+        start_store(tile, slot)
+        return carry
 
-    out_slots[slot] = in_slots[slot] + upd_ref[...]
-    start_store(i, slot)
-
-    @pl.when(i + depth < n_tiles)
-    def _():
-        issue_load(i + depth, slot)
+    coro_loop(n_tiles, depth, issue_load, consume, wait_load, grid_step=i)
 
     # final drain: every slot has exactly one outstanding store at the end
     # (earlier ones were drained before their buffer was rewritten)
@@ -82,13 +83,17 @@ def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref, in_slots,
             wait_store(s)
 
 
-def scatter_add_unique(table, idx, updates, *, depth: int = 4,
+def scatter_add_unique(table, idx, updates, *, depth: int | None = None,
                        rows_per_tile: int = 8, interpret: bool = True):
     """In-place pipelined RMW. `idx` must be duplicate-free (see ops.py)."""
     n = idx.shape[0]
     assert n % rows_per_tile == 0
     n_tiles = n // rows_per_tile
     d = table.shape[1]
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_scatter_add(rows_per_tile, d, table.dtype.itemsize),
+            kernel="scatter_add")
     depth = min(depth, n_tiles)
 
     kernel = functools.partial(

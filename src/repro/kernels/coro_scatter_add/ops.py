@@ -13,7 +13,7 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def coro_scatter_add(table, idx, updates, *, depth: int = 4,
+def coro_scatter_add(table, idx, updates, *, depth: int | None = None,
                      rows_per_tile: int = 8, interpret: bool | None = None):
     """table[idx[i]] += updates[i] with duplicates combined up front.
 

@@ -6,6 +6,8 @@ semaphore; while block i is in flight, blocks i-1..i-depth+1 are being
 consumed by the online-softmax accumulator. This is the paper's pattern at
 its purest — latency-bound streaming with O(1) compute per byte — and the
 kernel the serving path uses on TPU (jnp twin: models.common.decode_attention).
+The pipeline schedule is `core.coro.coro_loop` in fori mode; only the
+issue/wait/consume callbacks are kernel-specific.
 """
 from __future__ import annotations
 
@@ -15,6 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import autotune
+from repro.core.coro import coro_loop
 
 NEG_INF = -1e30
 
@@ -32,7 +37,7 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, k_slots, v_slots,
         pltpu.make_async_copy(v_ref.at[b, pl.ds(start, blk)], v_slots.at[slot],
                               sems.at[slot]).start()
 
-    def wait(slot):
+    def wait(blk_i, slot):
         pltpu.make_async_copy(k_slots.at[slot], k_slots.at[slot],
                               sems.at[slot]).wait()
         pltpu.make_async_copy(v_slots.at[slot], v_slots.at[slot],
@@ -43,14 +48,9 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, k_slots, v_slots,
     l_s[...] = jnp.zeros_like(l_s)
     acc_s[...] = jnp.zeros_like(acc_s)
 
-    for t in range(min(depth, n_blocks)):
-        issue(t, t)
-
     q = q_ref[0].reshape(kh, g, d).astype(jnp.float32) * (d ** -0.5)
 
-    def body(i, _):
-        slot = jax.lax.rem(i, depth)
-        wait(slot)
+    def consume(i, slot, carry):
         k = k_slots[slot].astype(jnp.float32)   # [blk, kh, d]
         v = v_slots[slot].astype(jnp.float32)
         s = jnp.einsum("kgd,bkd->kgb", q, k)    # [kh, g, blk]
@@ -62,26 +62,25 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, k_slots, v_slots,
         l_s[...] = l_s[...] * corr + p.sum(axis=-1)
         acc_s[...] = acc_s[...] * corr[..., None] + jnp.einsum("kgb,bkd->kgd", p, v)
         m_s[...] = m_new
+        return carry
 
-        @pl.when(i + depth < n_blocks)
-        def _():
-            issue(i + depth, slot)
-
-        return 0
-
-    jax.lax.fori_loop(0, n_blocks, body, 0)
+    coro_loop(n_blocks, depth, issue, consume, wait)
     out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
     o_ref[...] = out.reshape(1, kh * g, d).astype(o_ref.dtype)
 
 
-def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128, depth: int = 4,
-                 interpret: bool = True):
+def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128,
+                 depth: int | None = None, interpret: bool = True):
     """q: [B,H,D]; caches: [B,S,KH,D]; pos: scalar int32. Returns [B,H,D]."""
     bsz, h, d = q.shape
     s, kh = k_cache.shape[1], k_cache.shape[2]
     assert s % blk == 0
     n_blocks = s // blk
     g = h // kh
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_decode(blk, kh, g, d, k_cache.dtype.itemsize),
+            kernel="flash_decode")
     depth = min(depth, n_blocks)
 
     kernel = functools.partial(

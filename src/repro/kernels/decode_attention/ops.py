@@ -1,9 +1,13 @@
-"""Public flash-decode op with latency-aware depth selection."""
+"""Public flash-decode op with latency-aware depth selection.
+
+``depth=None`` solves the pipeline depth from the KV-block `TileProfile`
+via core.autotune (exactly `schedule.solve_depth` until transfer samples
+are recorded; see autotune.record_transfer).
+"""
 from __future__ import annotations
 
 import jax
 
-from repro.core.schedule import TileProfile, solve_depth
 from repro.kernels.decode_attention.decode_attention import flash_decode
 
 
@@ -14,12 +18,5 @@ def _on_tpu() -> bool:
 def decode_attention(q, k_cache, v_cache, pos, *, blk: int = 128,
                      depth: int | None = None, interpret: bool | None = None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    if depth is None:
-        _, h, d = q.shape
-        kh = k_cache.shape[2]
-        tile_bytes = 2 * blk * kh * d * k_cache.dtype.itemsize
-        flops = 4.0 * blk * h * d  # qk + pv per block
-        depth = min(solve_depth(TileProfile(tile_bytes=tile_bytes,
-                                            flops_per_tile=flops)), 8)
     return flash_decode(q, k_cache, v_cache, pos, blk=blk, depth=depth,
                         interpret=interpret)

@@ -3,8 +3,12 @@
 In expert-parallel MoE the *weights* are the far-memory objects: each local
 expert's [dm, f] matrix is streamed HBM->VMEM tile-by-tile while the MXU
 consumes the previous tile — the coroutine pipeline with weight tiles as the
-in-flight context (CoroAMU's HJ build side). BlockSpec tiling supplies the
-double-buffered schedule; block shapes keep MXU dims at 128-multiples.
+in-flight context (CoroAMU's HJ build side). Each tile is a strided DMA
+window [dm, f_tile] of the expert's weight matrix (no host-side relayout:
+the weights stream from their native [E, dm, f] layout); the pipeline is
+`core.coro.coro_loop` in fori mode with `depth` weight tiles in flight
+(``depth=None`` solves it from the tile profile via core.autotune),
+replacing the fixed double-buffering BlockSpec supplied before.
 """
 from __future__ import annotations
 
@@ -13,30 +17,64 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import autotune
+from repro.core.coro import coro_loop, wait_block
 
 
-def _gmm_kernel(t_ref, w_ref, o_ref):
-    # t: [1, C, dm], w: [1, dm, ft] -> o: [1, C, ft]
-    o_ref[...] = jnp.einsum(
-        "cd,df->cf", t_ref[0], w_ref[0],
-        preferred_element_type=jnp.float32,
-    ).astype(o_ref.dtype)[None]
+def _gmm_kernel(t_ref, w_ref, o_ref, slots, sems, *, depth: int,
+                f_tile: int, n_tiles: int):
+    e_i = pl.program_id(0)
+
+    def issue(tile, slot):
+        pltpu.make_async_copy(
+            w_ref.at[e_i, :, pl.ds(tile * f_tile, f_tile)],
+            slots.at[slot], sems.at[slot]).start()
+
+    def wait(tile, slot):
+        wait_block(slots.at[slot], sems.at[slot])
+
+    tokens = t_ref[0]  # [c, dm]
+
+    def consume(tile, slot, carry):
+        o_ref[0, :, pl.ds(tile * f_tile, f_tile)] = jnp.einsum(
+            "cd,df->cf", tokens, slots[slot],
+            preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+        return carry
+
+    coro_loop(n_tiles, depth, issue, consume, wait)
 
 
-def gmm(tokens, weights, *, f_tile: int = 128, interpret: bool = True):
+def gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
+        interpret: bool = True):
     """tokens: [E, C, dm]; weights: [E, dm, f] -> [E, C, f]."""
     e, c, dm = tokens.shape
     f = weights.shape[-1]
     assert f % f_tile == 0
-    grid = (e, f // f_tile)
+    n_tiles = f // f_tile
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_gmm(c, dm, f_tile, weights.dtype.itemsize,
+                                 f_total=f),
+            kernel="moe_gmm")
+    depth = min(depth, n_tiles)
+
+    kernel = functools.partial(_gmm_kernel, depth=depth, f_tile=f_tile,
+                               n_tiles=n_tiles)
     return pl.pallas_call(
-        _gmm_kernel,
-        grid=grid,
+        kernel,
+        grid=(e,),
         in_specs=[
-            pl.BlockSpec((1, c, dm), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, dm, f_tile), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, c, dm), lambda i: (i, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
         ],
-        out_specs=pl.BlockSpec((1, c, f_tile), lambda i, j: (i, 0, j)),
+        out_specs=pl.BlockSpec((1, c, f), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), tokens.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((depth, dm, f_tile), weights.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
         interpret=interpret,
     )(tokens, weights)

@@ -1,4 +1,9 @@
-"""Public grouped-matmul op."""
+"""Public grouped-matmul op.
+
+``depth=None`` solves the number of in-flight weight tiles from the tile's
+`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
+samples are recorded).
+"""
 from __future__ import annotations
 
 import jax
@@ -10,6 +15,7 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def moe_gmm(tokens, weights, *, f_tile: int = 128, interpret: bool | None = None):
+def moe_gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
+            interpret: bool | None = None):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return gmm(tokens, weights, f_tile=f_tile, interpret=interpret)
+    return gmm(tokens, weights, f_tile=f_tile, depth=depth, interpret=interpret)

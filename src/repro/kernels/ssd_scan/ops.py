@@ -1,4 +1,9 @@
-"""Public SSD-scan op."""
+"""Public SSD-scan op.
+
+``depth=None`` solves the number of in-flight chunk loads from the chunk's
+`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
+samples are recorded).
+"""
 from __future__ import annotations
 
 import jax
@@ -10,7 +15,9 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def ssd(x, dt, A, B, C, *, chunk: int = 64, interpret: bool | None = None):
+def ssd(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
+        interpret: bool | None = None):
     """Batched SSD. x:[b,s,nh,p] dt:[b,s,nh] A:[nh] B,C:[b,s,n]."""
     interpret = (not _on_tpu()) if interpret is None else interpret
-    return ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return ssd_scan(x, dt, A, B, C, chunk=chunk, depth=depth,
+                    interpret=interpret)

@@ -1,12 +1,17 @@
 """Chunked SSD (Mamba-2) scan kernel with streaming state.
 
-Grid = (batch, chunks): each step processes one sequence chunk; the
-recurrent state [H,P,N] lives in VMEM scratch across chunk steps (the
-paper's "sequential" variable class — core/context.py) and resets at each
-new batch element. Chunk inputs (x, dt, B, C) stream HBM->VMEM through
-Pallas's BlockSpec pipeline, which is the compiler-generated form of the
-same decoupled issue/wait mechanism the manual kernels spell out (the block
-for step i+1 is being DMA'd while step i computes).
+Grid = (batch,): each grid step scans one sequence; the recurrent state
+[H,P,N] lives in VMEM scratch across chunks (the paper's "sequential"
+variable class — core/context.py, one copy regardless of depth) and resets
+at each batch element. Chunk inputs (x, dt, B, C) stream HBM->VMEM through
+`core.coro.coro_loop` in fori mode: each chunk's four DMAs form one aset
+group on a slot semaphore and `depth` chunks are in flight while earlier
+chunks compute — the same decoupled issue/wait substrate as the manual
+gather kernels, replacing the compiler-chosen BlockSpec double-buffering
+(``depth=None`` solves the depth from the chunk profile via core.autotune).
+
+Note the intra-chunk math is order-free; only the [H,P,N] state carries the
+sequential dependence, so deep pipelining of chunk *loads* is safe.
 """
 from __future__ import annotations
 
@@ -17,51 +22,69 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import autotune
+from repro.core.coro import coro_loop, wait_block
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_s, *,
-                chunk: int, nh: int, p: int, n: int, n_chunks: int):
-    ci = pl.program_id(1)
 
-    @pl.when(ci == 0)
-    def _():
-        h_s[...] = jnp.zeros_like(h_s)
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
+                x_slots, dt_slots, b_slots, c_slots, sems, h_s, *,
+                depth: int, chunk: int, nh: int, p: int, n: int,
+                n_chunks: int):
+    b_i = pl.program_id(0)
 
-    x = x_ref[0].astype(jnp.float32)      # [chunk, nh, p]
-    dt = dt_ref[0].astype(jnp.float32)    # [chunk, nh]
-    B = b_ref[0].astype(jnp.float32)      # [chunk, n]
-    C = c_ref[0].astype(jnp.float32)      # [chunk, n]
-    A = a_ref[...].astype(jnp.float32)    # [nh]
+    def issue(tile, slot):
+        start = tile * chunk
+        for ref, buf in ((x_ref, x_slots), (dt_ref, dt_slots),
+                         (b_ref, b_slots), (c_ref, c_slots)):
+            pltpu.make_async_copy(ref.at[b_i, pl.ds(start, chunk)],
+                                  buf.at[slot], sems.at[slot]).start()
 
-    dA = dt * A                            # [chunk, nh] (<=0)
-    cs = jnp.cumsum(dA, axis=0)
-    total = cs[-1]                         # [nh]
-    dtx = x * dt[..., None]                # [chunk, nh, p]
-    scores = C @ B.T                       # [chunk, chunk]
+    def wait(tile, slot):
+        for buf in (x_slots, dt_slots, b_slots, c_slots):
+            wait_block(buf.at[slot], sems.at[slot])
+
+    h_s[...] = jnp.zeros_like(h_s)  # fresh state per batch element
+    A = a_ref[...].astype(jnp.float32)         # [nh]
     causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
 
-    ys = []
-    h_next = []
-    for h in range(nh):
-        seg = cs[:, None, h] - cs[None, :, h]
-        L = jnp.exp(seg) * causal
-        y_intra = (scores * L) @ dtx[:, h]
-        h_prev = h_s[h]                                    # [p, n]
-        y_inter = jnp.exp(cs[:, h])[:, None] * (C @ h_prev.T)
-        ys.append(y_intra + y_inter)
-        decay_to_end = jnp.exp(total[h] - cs[:, h])
-        s_chunk = (B * decay_to_end[:, None]).T @ dtx[:, h]  # [n, p]
-        h_next.append(h_prev * jnp.exp(total[h]) + s_chunk.T)
+    def consume(tile, slot, carry):
+        x = x_slots[slot].astype(jnp.float32)    # [chunk, nh, p]
+        dt = dt_slots[slot].astype(jnp.float32)  # [chunk, nh]
+        B = b_slots[slot].astype(jnp.float32)    # [chunk, n]
+        C = c_slots[slot].astype(jnp.float32)    # [chunk, n]
 
-    y_ref[...] = jnp.stack(ys, axis=1).astype(y_ref.dtype)[None]
-    for h in range(nh):
-        h_s[h] = h_next[h]
+        dA = dt * A                             # [chunk, nh] (<=0)
+        cs = jnp.cumsum(dA, axis=0)
+        total = cs[-1]                          # [nh]
+        dtx = x * dt[..., None]                 # [chunk, nh, p]
+        scores = C @ B.T                        # [chunk, chunk]
 
-    @pl.when(ci == n_chunks - 1)
-    def _():
-        hout_ref[...] = h_s[...].astype(hout_ref.dtype)[None]
+        ys = []
+        h_next = []
+        for h in range(nh):
+            seg = cs[:, None, h] - cs[None, :, h]
+            L = jnp.exp(seg) * causal
+            y_intra = (scores * L) @ dtx[:, h]
+            h_prev = h_s[h]                                    # [p, n]
+            y_inter = jnp.exp(cs[:, h])[:, None] * (C @ h_prev.T)
+            ys.append(y_intra + y_inter)
+            decay_to_end = jnp.exp(total[h] - cs[:, h])
+            s_chunk = (B * decay_to_end[:, None]).T @ dtx[:, h]  # [n, p]
+            h_next.append(h_prev * jnp.exp(total[h]) + s_chunk.T)
+
+        y_ref[0, pl.ds(tile * chunk, chunk)] = jnp.stack(
+            ys, axis=1).astype(y_ref.dtype)
+        for h in range(nh):
+            h_s[h] = h_next[h]
+        return carry
+
+    coro_loop(n_chunks, depth, issue, consume, wait)
+
+    hout_ref[...] = h_s[...].astype(hout_ref.dtype)[None]
 
 
-def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
+             interpret: bool = True):
     """Batched SSD. x:[b,s,nh,p] dt:[b,s,nh] A:[nh] B,C:[b,s,n].
 
     Returns (y [b,s,nh,p], h_final [b,nh,p,n]).
@@ -70,28 +93,41 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, interpret: bool = True):
     n = B.shape[-1]
     assert s % chunk == 0
     n_chunks = s // chunk
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_ssd(chunk, nh, p, n, x.dtype.itemsize,
+                                 seq_len=s),
+            kernel="ssd_scan")
+    depth = min(depth, n_chunks)
 
-    kernel = functools.partial(_ssd_kernel, chunk=chunk, nh=nh, p=p, n=n,
-                               n_chunks=n_chunks)
+    kernel = functools.partial(_ssd_kernel, depth=depth, chunk=chunk, nh=nh,
+                               p=p, n=n, n_chunks=n_chunks)
     out = pl.pallas_call(
         kernel,
-        grid=(bsz, n_chunks),
+        grid=(bsz,),
         in_specs=[
-            pl.BlockSpec((1, chunk, nh, p), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, chunk, nh), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((nh,), lambda b, i: (0,)),
-            pl.BlockSpec((1, chunk, n), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, chunk, n), lambda b, i: (b, i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),            # x
+            pl.BlockSpec(memory_space=pl.ANY),            # dt
+            pl.BlockSpec((nh,), lambda b: (0,)),          # A (small, resident)
+            pl.BlockSpec(memory_space=pl.ANY),            # B
+            pl.BlockSpec(memory_space=pl.ANY),            # C
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, nh, p), lambda b, i: (b, i, 0, 0)),
-            pl.BlockSpec((1, nh, p, n), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, s, nh, p), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, nh, p, n), lambda b: (b, 0, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, s, nh, p), x.dtype),
             jax.ShapeDtypeStruct((bsz, nh, p, n), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((nh, p, n), jnp.float32)],
+        scratch_shapes=[
+            pltpu.VMEM((depth, chunk, nh, p), x.dtype),
+            pltpu.VMEM((depth, chunk, nh), dt.dtype),
+            pltpu.VMEM((depth, chunk, n), B.dtype),
+            pltpu.VMEM((depth, chunk, n), C.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.VMEM((nh, p, n), jnp.float32),
+        ],
         interpret=interpret,
     )(x, dt, A, B, C)
     return out[0], out[1]

@@ -1,4 +1,9 @@
-"""Public STREAM-triad op."""
+"""Public STREAM-triad op.
+
+``depth=None`` solves the pipeline depth from the triad tile's
+`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
+samples are recorded).
+"""
 from __future__ import annotations
 
 import jax
@@ -10,7 +15,7 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def stream_triad(b, c, scalar, *, rows: int = 128, depth: int = 4,
+def stream_triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
                  interpret: bool | None = None):
     interpret = (not _on_tpu()) if interpret is None else interpret
     return triad(b, c, scalar, rows=rows, depth=depth, interpret=interpret)

@@ -4,7 +4,9 @@ The bandwidth-bound end of the paper's benchmark suite (Table II). Unlike the
 gather kernels, every request is a maximal coarse-grained span (the paper's
 §III-C case 1 — unit-stride loops coalesce perfectly), so the pipeline
 measures pure issue/consume overlap: tiles of b and c stream in as one aset
-group of two span DMAs per slot while a-tiles stream back out.
+group of two span DMAs per slot while a-tiles stream back out. The rotation
+is `core.coro.coro_loop` in grid mode; the store pipeline (drain previous
+store, compute, start new store) lives in the consume callback.
 """
 from __future__ import annotations
 
@@ -14,6 +16,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import autotune
+from repro.core.coro import coro_loop
 
 
 def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
@@ -27,7 +32,7 @@ def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
         pltpu.make_async_copy(c_ref.at[pl.ds(start, rows)], c_slots.at[slot],
                               load_sems.at[slot]).start()
 
-    def wait_loads(slot):
+    def wait_loads(tile, slot):
         pltpu.make_async_copy(b_slots.at[slot], b_slots.at[slot],
                               load_sems.at[slot]).wait()
         pltpu.make_async_copy(c_slots.at[slot], c_slots.at[slot],
@@ -37,25 +42,18 @@ def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
         pltpu.make_async_copy(a_slots.at[slot], a_slots.at[slot],
                               store_sems.at[slot]).wait()
 
-    @pl.when(i == 0)
-    def _():
-        for t in range(min(depth, n_tiles)):
-            issue(t, t)
+    def consume(tile, slot, carry):
+        @pl.when(tile >= depth)
+        def _():
+            wait_store(slot)
 
-    slot = jax.lax.rem(i, depth)
-    wait_loads(slot)
+        a_slots[slot] = b_slots[slot] + s_ref[0] * c_slots[slot]
+        pltpu.make_async_copy(a_slots.at[slot],
+                              a_ref.at[pl.ds(tile * rows, rows)],
+                              store_sems.at[slot]).start()
+        return carry
 
-    @pl.when(i >= depth)
-    def _():
-        wait_store(slot)
-
-    a_slots[slot] = b_slots[slot] + s_ref[0] * c_slots[slot]
-    pltpu.make_async_copy(a_slots.at[slot], a_ref.at[pl.ds(i * rows, rows)],
-                          store_sems.at[slot]).start()
-
-    @pl.when(i + depth < n_tiles)
-    def _():
-        issue(i + depth, slot)
+    coro_loop(n_tiles, depth, issue, consume, wait_loads, grid_step=i)
 
     @pl.when(i == n_tiles - 1)
     def _():
@@ -63,12 +61,16 @@ def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
             wait_store(s)
 
 
-def triad(b, c, scalar, *, rows: int = 128, depth: int = 4,
+def triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
           interpret: bool = True):
     """a = b + scalar*c over [N, d] arrays, N a multiple of `rows`."""
     n, d = b.shape
     assert n % rows == 0
     n_tiles = n // rows
+    if depth is None:
+        depth = autotune.choose_depth(
+            autotune.profile_triad(rows, d, b.dtype.itemsize),
+            kernel="stream_triad")
     depth = min(depth, n_tiles)
     kernel = functools.partial(_triad_kernel, depth=depth, rows=rows,
                                n_tiles=n_tiles)

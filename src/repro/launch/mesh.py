@@ -4,24 +4,38 @@ A function (not a module-level constant) so importing this module never
 touches jax device state. The single-pod mesh is 16x16 = 256 chips; the
 multi-pod mesh is 2 pods x 256 = 512 chips with DP extended over the `pod`
 axis (only gradient all-reduce crosses the pod/DCN boundary).
+
+Compatibility floor: jax >= 0.4.35 (for `jax.make_mesh`). `AxisType` only
+exists from jax 0.5; on older versions (the pinned 0.4.37 environment) the
+`axis_types` argument is omitted — every axis then defaults to the same
+auto sharding behaviour, which is what we pass explicitly on newer jax.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mini_mesh(devices: int = 8, model: int = 2):
     """Small host mesh for CI-style sharded tests (e.g. 8 CPU devices)."""
     data = devices // model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_by_name(name: str):

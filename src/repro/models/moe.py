@@ -22,7 +22,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamSpec
-from repro.sharding import ShardingCtx
+from repro.sharding import ShardingCtx, shard_map
 
 
 def moe_param_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
@@ -154,7 +154,7 @@ def moe_ep_a2a(p, x, cfg: ArchConfig, ctx: ShardingCtx):
         return y.reshape(bl, sl, d), aux
 
     in_x = P(bspec, "model", None)  # sequence-parallel tokens
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=mesh,
         in_specs=(_expert_specs(), in_x),
         out_specs=(in_x, P()),
@@ -189,7 +189,7 @@ def moe_ep_replicated(p, x, cfg: ArchConfig, ctx: ShardingCtx):
         return y.reshape(bl, sl, d), aux
 
     in_x = P(bspec, None, None)
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         fn, mesh=mesh,
         in_specs=(_expert_specs(), in_x),
         out_specs=(in_x, P()),

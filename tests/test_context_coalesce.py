@@ -1,17 +1,34 @@
-"""Property tests: coalescing planner and context classifier (paper §III-B/C)."""
+"""Property tests: coalescing planner and context classifier (paper §III-B/C).
+
+The sweeps run as seeded `parametrize` cases so the suite has no hard
+hypothesis dependency; one broader fuzz test uses hypothesis when it is
+installed (pytest.importorskip) — the only place it adds coverage beyond
+the seeded grid.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.context import VarClass, VarSpec, classify, context_bytes, max_depth
 from repro.core.descriptors import apply_plan_reference, dedup_rmw, plan_gather
 
 
-@settings(max_examples=60, deadline=None)
-@given(idx=st.lists(st.integers(0, 127), min_size=0, max_size=200),
-       span=st.sampled_from([2, 4, 8, 16]))
-def test_plan_gather_is_exact_permutation(idx, span):
+def _random_idx(seed: int, size: int, hi: int = 128) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    # mix runs (coalescable) with random points, like real gather streams
+    run_len = r.randint(0, max(size, 1) + 1)
+    start = r.randint(0, hi - max(run_len, 1))
+    run = np.arange(start, start + run_len)
+    rand = r.randint(0, hi, size - run_len if size > run_len else 0)
+    idx = np.concatenate([run, rand])[:size]
+    return np.asarray(idx, np.int64)
+
+
+@pytest.mark.parametrize("span", [2, 4, 8, 16])
+@pytest.mark.parametrize("seed,size", [(0, 0), (1, 1), (2, 13), (3, 50),
+                                       (4, 128), (5, 200)])
+def test_plan_gather_is_exact_permutation(seed, size, span):
     """Every request appears exactly once, in the right output slot."""
-    idx = np.asarray(idx, np.int64)
+    idx = _random_idx(seed, size)
     table = np.arange(128 * 4).reshape(128, 4).astype(np.float32)
     plan = plan_gather(idx, span=span)
     out = apply_plan_reference(plan, table)
@@ -19,8 +36,8 @@ def test_plan_gather_is_exact_permutation(idx, span):
     assert plan.requests_issued() <= max(len(idx), 0) or len(idx) == 0
 
 
-@settings(max_examples=30, deadline=None)
-@given(run_len=st.integers(1, 64), span=st.sampled_from([4, 8]))
+@pytest.mark.parametrize("span", [4, 8])
+@pytest.mark.parametrize("run_len", [1, 3, 4, 7, 8, 9, 15, 16, 33, 64])
 def test_plan_gather_coalesces_runs(run_len, span):
     idx = np.arange(run_len)
     plan = plan_gather(idx, span=span)
@@ -28,10 +45,10 @@ def test_plan_gather_coalesces_runs(run_len, span):
     assert plan.n_singles == run_len % span
 
 
-@settings(max_examples=40, deadline=None)
-@given(idx=st.lists(st.integers(0, 31), min_size=1, max_size=60))
-def test_dedup_rmw_preserves_scatter_sum(idx):
-    idx = np.asarray(idx, np.int64)
+@pytest.mark.parametrize("seed,size", [(0, 1), (1, 7), (2, 23), (3, 60),
+                                       (4, 41)])
+def test_dedup_rmw_preserves_scatter_sum(seed, size):
+    idx = np.asarray(np.random.RandomState(seed).randint(0, 32, size), np.int64)
     upd = np.random.RandomState(0).randn(len(idx), 3)
     uniq, summed = dedup_rmw(idx, upd)
     assert len(np.unique(uniq)) == len(uniq)
@@ -54,17 +71,21 @@ def test_classification_matches_paper_rules():
     assert classify(VarSpec("hint", 8, hint=VarClass.SHARED)) is VarClass.SHARED
 
 
-@settings(max_examples=40, deadline=None)
-@given(depth=st.integers(1, 512),
-       specs=st.lists(
-           st.builds(VarSpec,
-                     name=st.text(min_size=1, max_size=4),
-                     nbytes=st.integers(1, 4096),
-                     read_only=st.booleans(),
-                     carries_dependence=st.booleans(),
-                     commutative=st.booleans()),
-           min_size=1, max_size=8))
-def test_optimized_context_never_larger(depth, specs):
+def _random_specs(seed: int, max_specs: int = 8, max_bytes: int = 4096):
+    r = np.random.RandomState(seed)
+    return [
+        VarSpec(name=f"v{i}", nbytes=int(r.randint(1, max_bytes + 1)),
+                read_only=bool(r.randint(2)),
+                carries_dependence=bool(r.randint(2)),
+                commutative=bool(r.randint(2)))
+        for i in range(r.randint(1, max_specs + 1))
+    ]
+
+
+@pytest.mark.parametrize("depth", [1, 2, 37, 512])
+@pytest.mark.parametrize("seed", range(10))
+def test_optimized_context_never_larger(depth, seed):
+    specs = _random_specs(seed)
     opt = context_bytes(specs, depth)
     base = context_bytes(specs, depth, baseline=True)
     assert opt <= base
@@ -73,12 +94,31 @@ def test_optimized_context_never_larger(depth, specs):
     assert max_depth(specs, budget) >= max_depth(specs, budget, baseline=True)
 
 
-@settings(max_examples=30, deadline=None)
-@given(budget=st.integers(0, 1 << 20),
-       specs=st.lists(
-           st.builds(VarSpec, name=st.just("v"), nbytes=st.integers(1, 1024)),
-           min_size=1, max_size=5))
-def test_max_depth_fits_budget(budget, specs):
+@pytest.mark.parametrize("budget", [0, 1, 100, 4096, 1 << 20])
+@pytest.mark.parametrize("seed", range(5))
+def test_max_depth_fits_budget(budget, seed):
+    specs = _random_specs(seed, max_specs=5, max_bytes=1024)
     d = max_depth(specs, budget)
     if d > 0:
         assert context_bytes(specs, d) <= budget
+
+
+# ------------------------------------- optional hypothesis fuzz (extra path)
+
+
+def test_plan_gather_permutation_fuzz_hypothesis():
+    """Broader fuzz of the planner when hypothesis is available."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(idx=st.lists(st.integers(0, 127), min_size=0, max_size=200),
+           span=st.sampled_from([2, 4, 8, 16]))
+    def prop(idx, span):
+        idx = np.asarray(idx, np.int64)
+        table = np.arange(128 * 4).reshape(128, 4).astype(np.float32)
+        plan = plan_gather(idx, span=span)
+        out = apply_plan_reference(plan, table)
+        np.testing.assert_array_equal(out, table[idx] if len(idx) else out)
+
+    prop()

@@ -1,8 +1,10 @@
-"""coro_scatter_add: pipelined RMW with dedup vs oracle."""
+"""coro_scatter_add: pipelined RMW with dedup vs oracle.
+
+Property tests run as seeded `parametrize` sweeps (no hard hypothesis dep).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels.coro_scatter_add.ops import coro_scatter_add
 from repro.kernels.coro_scatter_add.ref import scatter_add_ref
@@ -20,10 +22,10 @@ def test_scatter_add_matches_ref(rng, dtype, n, d, k):
                                np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2)
 
 
-@settings(max_examples=10, deadline=None)
-@given(idx=st.lists(st.integers(0, 31), min_size=1, max_size=40))
-def test_scatter_add_duplicates_accumulate(idx):
-    idx = np.asarray(idx, np.int32)
+@pytest.mark.parametrize("seed,k", [(0, 1), (1, 5), (2, 17), (3, 40), (4, 27),
+                                    (5, 33)])
+def test_scatter_add_duplicates_accumulate(seed, k):
+    idx = np.asarray(np.random.RandomState(seed).randint(0, 32, k), np.int32)
     table = jnp.zeros((32, 8), jnp.float32)
     upd = jnp.ones((idx.shape[0], 8), jnp.float32)
     out = coro_scatter_add(table, idx, upd)

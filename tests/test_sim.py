@@ -1,9 +1,8 @@
 """The paper's numeric claims hold in the calibrated model (±15%),
-plus structural invariants (hypothesis)."""
+plus structural invariants (seeded parametrize sweeps)."""
 import statistics
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import sim
 
@@ -90,10 +89,9 @@ def test_compiler_opts_help_where_paper_says():
 # ------------------------------------------------------------- invariants
 
 
-@settings(max_examples=40, deadline=None)
-@given(lat=st.floats(100, 1000), n=st.integers(2, 512),
-       bench=st.sampled_from(sorted(sim.BENCHES)),
-       variant=st.sampled_from(sim.VARIANTS))
+@pytest.mark.parametrize("lat,n", [(100.0, 2), (237.5, 96), (1000.0, 512)])
+@pytest.mark.parametrize("bench", sorted(sim.BENCHES))
+@pytest.mark.parametrize("variant", sim.VARIANTS)
 def test_sim_invariants(lat, n, bench, variant):
     r = sim.simulate(variant, sim.BENCHES[bench], latency_ns=lat, n_coros=n)
     assert r.cycles_per_iter > 0
@@ -101,8 +99,7 @@ def test_sim_invariants(lat, n, bench, variant):
     assert all(v >= 0 for v in r.breakdown.values())
 
 
-@settings(max_examples=20, deadline=None)
-@given(bench=st.sampled_from(sorted(sim.BENCHES)))
+@pytest.mark.parametrize("bench", sorted(sim.BENCHES))
 def test_serial_monotone_in_latency(bench):
     b = sim.BENCHES[bench]
     ts = [sim.simulate("serial", b, latency_ns=l).cycles_per_iter
