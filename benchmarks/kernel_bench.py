@@ -22,10 +22,16 @@ from benchmarks.common import csv_table, timed
 from repro.core import autotune
 from repro.core.descriptors import plan_gather
 from repro.core.schedule import TileProfile, solve_depth, achieved_bandwidth
+from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
 from repro.kernels.coro_gather.ref import gather_ref
+from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_spec
+from repro.kernels.decode_attention.decode_attention import decode_spec
+from repro.kernels.moe_gmm.moe_gmm import gmm_spec
+from repro.kernels.ssd_scan.ssd_scan import ssd_spec
 from repro.kernels.stream_copy.ops import stream_triad
 from repro.kernels.stream_copy.ref import triad_ref
+from repro.kernels.stream_copy.stream_copy import triad_spec
 
 
 def gather_rows():
@@ -101,6 +107,32 @@ def adaptive_rows():
     return [["adaptive_depth", "row_gather", n, static, adaptive]]
 
 
+def context_rows():
+    """Derived context per kernel family (the §III-B classification at work).
+
+    For each declared `CoroSpec`: the depth the autotuner solves from the
+    spec, the classified context bytes at that depth, and the all-private
+    baseline a conventional coroutine frame would occupy (Fig. 15's
+    comparison) — the shared/sequential savings ratio in the last column.
+    """
+    f32 = jnp.float32
+    specs = (
+        row_gather_spec(8, 128, f32),
+        scatter_add_spec(8, 128, f32),
+        decode_spec(128, 8, 12, 128, f32),
+        gmm_spec(64, 512, 128, f32, f_total=2048),
+        ssd_spec(64, 8, 64, 128, f32, seq_len=2048),
+        triad_spec(128, 512, f32),
+    )
+    out = []
+    for spec in specs:
+        depth = autotune.choose_depth(spec.profile(), vars=spec.all_vars())
+        opt = spec.context_bytes(depth)
+        base = spec.context_bytes(depth, baseline=True)
+        out.append([spec.name, depth, opt, base, round(opt / base, 3)])
+    return out
+
+
 def triad_rows():
     rng = np.random.RandomState(2)
     b = jnp.asarray(rng.randn(1024, 64), jnp.float32)
@@ -121,6 +153,8 @@ def table() -> str:
                    schedule_rows())
     s += csv_table(["pass", "kernel", "samples", "static_depth", "adaptive_depth"],
                    adaptive_rows())
+    s += csv_table(["spec", "depth", "ctx_bytes", "ctx_baseline", "ratio"],
+                   context_rows())
     return s
 
 

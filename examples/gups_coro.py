@@ -12,10 +12,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sim
+from repro.core import autotune, sim
 from repro.core.descriptors import plan_gather
 from repro.core.schedule import TileProfile, achieved_bandwidth, solve_depth
+from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
+from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_spec
 from repro.kernels.coro_scatter_add.ops import coro_scatter_add
 
 
@@ -25,11 +27,20 @@ def main():
     idx = rng.randint(0, 1024, 256).astype(np.int32)
     upd = jnp.asarray(rng.randn(256, 128) * 0.1, jnp.float32)
 
-    # GUPS = random gather + scatter-update, both through decoupled DMA
+    # GUPS = random gather + scatter-update, both through decoupled DMA;
+    # both kernels are CoroSpec declarations — scratch, semaphores and the
+    # schedule are derived, and depth=None solves from the classified context
     gathered = coro_gather(table, jnp.asarray(idx))
     updated = coro_scatter_add(table, idx, upd)
     print(f"gather ok: {gathered.shape}; update ok: {updated.shape} "
           f"(dedup handled {256 - len(np.unique(idx))} duplicate rows)")
+
+    for spec, key in ((row_gather_spec(8, 128, jnp.float32), "row_gather"),
+                      (scatter_add_spec(8, 128, jnp.float32), "scatter_add")):
+        depth = autotune.last_choice(key)
+        print(f"{key}: chose depth {depth}; derived context "
+              f"{spec.context_bytes(depth)} B "
+              f"(all-private baseline {spec.context_bytes(depth, baseline=True)} B)")
 
     plan = plan_gather(idx, span=8)
     print(f"coalescing on random indices: {plan.n_requests} -> "

@@ -2,6 +2,11 @@
 including a sliding-window (hymba) and an SSM (mamba2) arch to show the three
 cache families (full flash-decode / ring / recurrent state).
 
+For each attention arch we also report what the TPU flash-decode kernel
+would run with at that arch's full cache shape: the `CoroSpec`-derived
+context bytes (k/v slots x depth + shared online-softmax accumulators) and
+the latency-aware depth `core.autotune` solves from it.
+
   PYTHONPATH=src python examples/serve_batched.py
 """
 import sys
@@ -9,7 +14,11 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+import jax.numpy as jnp
+
 from repro.configs import get_config
+from repro.core import autotune
+from repro.kernels.decode_attention.decode_attention import decode_spec
 from repro.launch.serve import serve
 
 
@@ -18,6 +27,14 @@ def main():
         cfg = get_config(arch).reduced()
         stats = serve(cfg, batch=4, prompt_len=48, gen=12)
         print(f"{arch:15s} {stats}")
+        if cfg.n_heads and cfg.kv_heads:
+            d = cfg.resolved_head_dim
+            g = max(cfg.n_heads // cfg.kv_heads, 1)
+            spec = decode_spec(128, cfg.kv_heads, g, d, jnp.bfloat16)
+            depth = autotune.choose_depth(spec.profile(), vars=spec.all_vars())
+            print(f"{'':15s} flash-decode spec: depth {depth}, context "
+                  f"{spec.context_bytes(depth)} B (all-private baseline "
+                  f"{spec.context_bytes(depth, baseline=True)} B)")
 
 
 if __name__ == "__main__":

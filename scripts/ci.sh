@@ -1,13 +1,25 @@
 #!/usr/bin/env bash
 # One command to check the suite's green state.
 #
-#   scripts/ci.sh        -> fast lane (-m "not slow") then the tier-1 command
-#   scripts/ci.sh fast   -> fast lane only
+#   scripts/ci.sh        -> lint, fast lane (-m "not slow"), then tier-1
+#   scripts/ci.sh fast   -> lint + fast lane only
 #
 # The tier-1 command (ROADMAP.md): PYTHONPATH=src python -m pytest -x -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Lint first (config in pyproject.toml [tool.ruff]). The container image
+# does not bake ruff in, so skip with a notice when it is unavailable
+# rather than failing the whole lane.
+echo "== lint: ruff check =="
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples scripts
+elif python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check src tests benchmarks examples scripts
+else
+    echo "ruff not installed; skipping lint (pip install ruff to enable)"
+fi
 
 echo "== fast lane: python -m pytest -q -m 'not slow' =="
 python -m pytest -q -m "not slow"

@@ -23,15 +23,19 @@ Two paths:
 tests can report/assert the depth a ``depth=None`` call actually used.
 
 API stability note: `TileProfile` is defined in `core.schedule` and
-re-exported here; profiles for the five kernel families are built by the
-``profile_*`` helpers below so tests and benchmarks construct the exact
-profile a kernel entry point uses.
+re-exported here. Kernel entry points built on `core.coro.coro_call`
+derive their profile from the declarative `CoroSpec`
+(``spec.profile()``) and pass ``vars=spec.all_vars()`` so the VMEM cap
+comes from the classified context bytes; the ``profile_*`` helpers below
+remain the standalone traffic/flops models used by benchmarks and the
+modelled-latency figures.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
 
+from repro.core import context as ctx_mod
 from repro.core.schedule import (
     HBM_LATENCY_S,
     VMEM_BYTES,
@@ -52,6 +56,7 @@ __all__ = [
     "profile_span_gather",
     "profile_ssd",
     "profile_triad",
+    "record_choice",
     "record_transfer",
     "transfer_samples",
 ]
@@ -163,6 +168,17 @@ def last_choice(kernel: str) -> Optional[int]:
         return _last_choice.get(kernel)
 
 
+def record_choice(kernel: str, depth: int) -> None:
+    """Record the depth a kernel call actually ran with.
+
+    `coro.coro_call` overwrites the solver's raw answer with the value it
+    launched after clamping to the tile count, so `last_choice` reports an
+    allocated depth, never an unreachable one.
+    """
+    with _lock:
+        _last_choice[kernel] = int(depth)
+
+
 # ------------------------------------------------------------- the decision
 
 
@@ -172,6 +188,7 @@ def choose_depth(
     kernel: Optional[str] = None,
     latency_s: float = HBM_LATENCY_S,
     vmem_budget: int = VMEM_BYTES,
+    vars: Optional[Iterable[ctx_mod.VarSpec]] = None,
 ) -> int:
     """Solve the pipeline depth for one kernel call.
 
@@ -180,12 +197,23 @@ def choose_depth(
     vmem_budget=vmem_budget)`` — latency covered, VMEM capped, floor of 2.
     With samples (see `record_transfer`) it re-solves from the observed
     tail latency instead (`schedule.adaptive_depth`).
+
+    When `vars` is given (the `CoroSpec` path: ``spec.all_vars()``) the VMEM
+    cap is `context.max_depth(vars, vmem_budget)` — the §III-B classified
+    context bytes (private x depth, shared/sequential x 1) — instead of the
+    profile's hand-filled byte counts. A shared accumulator therefore
+    permits a deeper pipeline than the all-private baseline would.
     """
+    vmem_cap = None
+    if vars is not None:
+        vmem_cap = ctx_mod.max_depth(list(vars), vmem_budget)
     samples = transfer_samples(kernel) if kernel else []
     if samples:
-        depth = adaptive_depth(profile, samples, vmem_budget=vmem_budget)
+        depth = adaptive_depth(profile, samples, vmem_budget=vmem_budget,
+                               vmem_cap=vmem_cap)
     else:
-        depth = solve_depth(profile, latency_s=latency_s, vmem_budget=vmem_budget)
+        depth = solve_depth(profile, latency_s=latency_s,
+                            vmem_budget=vmem_budget, vmem_cap=vmem_cap)
     if kernel is not None:
         with _lock:
             _last_choice[kernel] = depth

@@ -13,13 +13,28 @@ suspension points:
 On TPU the "context" is the VMEM working set of the pipeline: private
 variables multiply by `depth`, shared ones do not — so this classification
 directly sizes the kernel scratch and bounds the reachable pipeline depth.
+
+`core.coro` consumes these specs declaratively: a kernel's `CoroSpec` lists
+its context as `VarSpec`s, and the builder derives each variable's scratch
+shape from `classify()` — `(depth, *shape)` for private, `shape` (one copy)
+for shared/sequential. A `VarSpec` with ``shape=None`` is accounting-only:
+it is counted against the VMEM budget (an operand block or loop-carry
+resident) but gets no scratch allocation of its own.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import math
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+# Depth values returned by `max_depth` are clamped here so an "unbounded"
+# answer (no per-slot bytes at all) can never flow into a scratch-shape
+# allocation or an unrolled warmup loop. Mirrors `schedule.REQUEST_SLOTS` —
+# the paper's "capped only by SPM request slots" bound.
+MAX_DEPTH = 64
 
 
 class VarClass(enum.Enum):
@@ -41,6 +56,18 @@ class VarSpec:
     commutative: bool = False
     # programmer hint overriding the analysis (paper: pragma shared_var)
     hint: Optional[VarClass] = None
+    # Materialization for the declarative builder (core.coro): when `shape`
+    # is given the builder allocates VMEM scratch for this variable; when
+    # None the bytes are budget-accounting only.
+    shape: Optional[Tuple[int, ...]] = None
+    dtype: Any = None
+
+
+def var(name: str, shape: Tuple[int, ...], dtype, **kwargs) -> VarSpec:
+    """A materialized `VarSpec`: nbytes derived from `shape` x `dtype`."""
+    shape = tuple(int(s) for s in shape)
+    nbytes = int(math.prod(shape)) * int(np.dtype(dtype).itemsize)
+    return VarSpec(name=name, nbytes=nbytes, shape=shape, dtype=dtype, **kwargs)
 
 
 def classify(v: VarSpec) -> VarClass:
@@ -75,13 +102,18 @@ def context_bytes(vs: Iterable[VarSpec], depth: int,
 
 
 def max_depth(vs: Iterable[VarSpec], vmem_budget: int,
-              *, baseline: bool = False) -> int:
-    """Largest pipeline depth whose context fits the VMEM budget."""
+              *, baseline: bool = False, cap: int = MAX_DEPTH) -> int:
+    """Largest pipeline depth whose context fits the VMEM budget.
+
+    Clamped to `cap` (default `MAX_DEPTH`, the request-slot bound) so that a
+    context with no per-slot bytes yields a finite, allocatable depth rather
+    than a sentinel.
+    """
     vs = list(vs)
     shared = sum(v.nbytes for v in vs
                  if not baseline and classify(v) is not VarClass.PRIVATE)
     per_slot = sum(v.nbytes for v in vs
                    if baseline or classify(v) is VarClass.PRIVATE)
     if per_slot == 0:
-        return 2 ** 30 if shared <= vmem_budget else 0
-    return max((vmem_budget - shared) // per_slot, 0)
+        return cap if shared <= vmem_budget else 0
+    return min(max((vmem_budget - shared) // per_slot, 0), cap)

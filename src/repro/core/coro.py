@@ -1,29 +1,209 @@
-"""The coroutine engine: decoupled-DMA software pipelines for Pallas TPU.
+"""The coroutine engine: declarative decoupled-DMA pipelines for Pallas TPU.
 
 This is the TPU-native realization of CoroAMU's execution model
-(DESIGN.md §2). Correspondence:
+(DESIGN.md §2). The paper's compiler takes *declared* memory operations and
+derives the minimized context and schedule (§III-B/§III-C); here a kernel
+declares a `CoroSpec` and the builder derives everything else.
+Correspondence:
 
-  aload/astore  -> pltpu.make_async_copy(...).start()        (issue)
-  getfin/bafin  -> semaphore wait on the slot being resumed   (poll/jump)
-  SPM slots     -> VMEM scratch shaped (depth, *tile)         (context)
+  aload         -> LoadStream            (decoupled HBM->VMEM copy group)
+  astore        -> StoreStream           (decoupled VMEM->HBM write-back,
+                                          drain-before-reuse + epilogue drain)
+  aset n        -> stream group=n        (n copies signalling one slot
+                                          semaphore; one wait-group)
+  context       -> CoroSpec.vars         (core.context.VarSpec; scratch shape
+                                          derived from classify(): private x
+                                          depth, shared/sequential x 1)
+  getfin/bafin  -> semaphore wait on the slot being resumed (poll/jump)
+  SPM slots     -> VMEM scratch shaped (depth, *tile), allocated here
   coroutine     -> pipeline slot processing one tile
-  aset n        -> n copies signalling one slot semaphore; one wait-group
-  scheduler     -> modulo rotation over slots (mispredict-free by
-                   construction: control flow is compile-time scheduled)
+  scheduler     -> modulo rotation over slots (`coro_loop`; mispredict-free
+                   by construction: control flow is compile-time scheduled)
 
-A kernel built on `coro_loop` keeps `depth` tiles in flight: while slot k's
-data is crossing HBM->VMEM, slots k-1, k-2, ... are being consumed - exactly
-the paper's interleaving of memory-driven coroutines.
+A kernel built on this module keeps `depth` tiles in flight: while slot k's
+data is crossing HBM<->VMEM, slots k-1, k-2, ... are being consumed — the
+paper's interleaving of memory-driven coroutines. `depth=None` lets
+`core.autotune.choose_depth` solve the depth from the spec's tile profile,
+with the VMEM cap taken from the classified context bytes.
+
+Layering:
+
+  CoroSpec / LoadStream / StoreStream  - the declaration (kernel authoring)
+  coro_call                            - entry-point builder: resolves depth,
+                                         derives scratch + semaphores, wraps
+                                         pl.pallas_call, runs the pipeline
+  coro_pipeline                        - the in-kernel engine (warmup /
+                                         rotate / wait / consume / store
+                                         drain) for hand-rolled kernels
+  coro_loop                            - the bare rotation (no streams)
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Sequence
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import context as ctx_mod
+
+__all__ = [
+    "CoroRefs",
+    "CoroSpec",
+    "LoadStream",
+    "StoreStream",
+    "coro_call",
+    "coro_loop",
+    "coro_pipeline",
+]
+
+
+# ------------------------------------------------------------ declarations
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadStream:
+    """A decoupled input stream (aload/aset): slot buffer x depth.
+
+    `src(ctx, tile)` returns the HBM ref-slice(s) feeding tile `tile`:
+    a single slice (coarse-grained span request, §III-C case 1) or a list of
+    `group` slices (an aset group — e.g. one DMA per gathered row), copied
+    into consecutive `tile[0] // group`-row chunks of the slot buffer.
+    """
+
+    name: str
+    tile: Tuple[int, ...]
+    dtype: Any
+    src: Callable[..., Any]
+    group: int = 1
+
+    def __post_init__(self):
+        _check_group(self)
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.tile)) * int(np.dtype(self.dtype).itemsize)
+
+
+def _check_group(stream) -> None:
+    if stream.group < 1 or stream.tile[0] % stream.group:
+        raise ValueError(
+            f"stream {stream.name!r}: tile[0]={stream.tile[0]} must divide "
+            f"into group={stream.group} equal chunks")
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreStream:
+    """A decoupled output stream (astore) with RMW drain semantics.
+
+    The body writes the slot buffer; the builder starts the write-back DMAs
+    to `dst(ctx, tile)` after the body, drains a slot's previous store
+    before the body may rewrite it (tile >= depth), and drains every slot
+    once more after the rotation retires (epilogue drain).
+    """
+
+    name: str
+    tile: Tuple[int, ...]
+    dtype: Any
+    dst: Callable[..., Any]
+    group: int = 1
+
+    def __post_init__(self):
+        _check_group(self)
+
+    @property
+    def nbytes(self) -> int:
+        return int(math.prod(self.tile)) * int(np.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoroSpec:
+    """Declarative description of one coroutine kernel family.
+
+    The builder derives from it, per depth:
+      * per-slot VMEM scratch for every stream ((depth, *tile), private
+        context by construction),
+      * one DMA semaphore array for the loads and one for the stores,
+      * scratch for every materialized `vars` entry, shaped from
+        `core.context.classify()` (private x depth, shared/sequential x 1),
+      * the tile's `TileProfile` (DMA bytes + flops) for the depth solver.
+    """
+
+    name: str
+    loads: Tuple[LoadStream, ...] = ()
+    stores: Tuple[StoreStream, ...] = ()
+    vars: Tuple[ctx_mod.VarSpec, ...] = ()
+    flops_per_tile: float = 0.0
+
+    def __post_init__(self):
+        names = [s.name for s in self.loads] + [s.name for s in self.stores] \
+            + [v.name for v in self.vars]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate stream/var names in spec: {names}")
+
+    # ---- derived context (paper §III-B)
+
+    def stream_vars(self) -> Tuple[ctx_mod.VarSpec, ...]:
+        """Every stream slot is private context: one copy per in-flight tile."""
+        return tuple(
+            ctx_mod.VarSpec(name=s.name, nbytes=s.nbytes,
+                            shape=tuple(s.tile), dtype=s.dtype)
+            for s in (*self.loads, *self.stores)
+        )
+
+    def all_vars(self) -> Tuple[ctx_mod.VarSpec, ...]:
+        return (*self.stream_vars(), *self.vars)
+
+    def context_bytes(self, depth: int, *, baseline: bool = False) -> int:
+        """Classified VMEM working set at `depth` (Fig. 15's comparison)."""
+        return ctx_mod.context_bytes(self.all_vars(), depth, baseline=baseline)
+
+    def tile_bytes(self) -> int:
+        """HBM traffic per tile: every load and store stream moves its tile."""
+        return sum(s.nbytes for s in (*self.loads, *self.stores))
+
+    def profile(self):
+        from repro.core.schedule import TileProfile  # local: avoid eager dep
+        return TileProfile(tile_bytes=self.tile_bytes(),
+                           flops_per_tile=float(self.flops_per_tile))
+
+    # ---- derived allocation
+
+    def scratch_shapes(self, depth: int) -> list:
+        """The scratch list a kernel needs, in the canonical order
+        [load slots..., store slots..., load sem, store sem, vars...]."""
+        shapes: list = [
+            pltpu.VMEM((depth, *s.tile), s.dtype)
+            for s in (*self.loads, *self.stores)
+        ]
+        if self.loads:
+            shapes.append(pltpu.SemaphoreType.DMA((depth,)))
+        if self.stores:
+            shapes.append(pltpu.SemaphoreType.DMA((depth,)))
+        for v in self.materialized_vars():
+            if ctx_mod.classify(v) is ctx_mod.VarClass.PRIVATE:
+                shapes.append(pltpu.VMEM((depth, *v.shape), v.dtype))
+            else:  # shared / sequential: one copy regardless of depth
+                shapes.append(pltpu.VMEM(tuple(v.shape), v.dtype))
+        return shapes
+
+    def materialized_vars(self) -> Tuple[ctx_mod.VarSpec, ...]:
+        return tuple(v for v in self.vars if v.shape is not None)
+
+
+class CoroRefs:
+    """Attribute namespace handed to spec callbacks: operand refs by their
+    declared name, stream slot buffers and materialized vars by stream/var
+    name."""
+
+    def __init__(self, mapping):
+        self.__dict__.update(mapping)
+
+
+# ----------------------------------------------------------- the rotation
 
 
 def coro_loop(
@@ -36,7 +216,7 @@ def coro_loop(
     *,
     grid_step: Any = None,
 ):
-    """Run the coroutine pipeline over `n_tiles` with `depth` in flight.
+    """Run the bare coroutine rotation over `n_tiles` with `depth` in flight.
 
     issue_fn(tile, slot)          - start the decoupled copies for `tile`
                                     into `slot` (aload/aset analogue)
@@ -45,7 +225,8 @@ def coro_loop(
                                     returns updated carry
 
     `n_tiles`/`depth` are Python ints (grid is static); `tile`/`slot` are
-    traced int32 inside the steady-state loop.
+    traced int32 inside the steady-state loop. `depth <= 0` is a no-op that
+    returns `carry_init` (spec-level entry points reject it earlier).
 
     Two drive modes share the one rotation (warmup / wait / consume /
     recycle) so no kernel re-implements the schedule:
@@ -93,46 +274,249 @@ def coro_loop(
     return step(grid_step, carry_init)
 
 
-# ------------------------------------------------------------- DMA helpers
+# --------------------------------------------------------- stream plumbing
 
 
-def issue_rows(hbm_ref, row_ids: Sequence, slot_buf, sem, *, rows_per_copy: int = 1):
-    """aset-style group: one DMA per row id, all bound to `sem`.
+def _as_group(slices, group: int):
+    if not isinstance(slices, (list, tuple)):
+        slices = [slices]
+    assert len(slices) == group, (len(slices), group)
+    return slices
 
-    row_ids are traced int32 scalars; each copies `rows_per_copy` contiguous
-    rows from `hbm_ref` into consecutive positions of `slot_buf`.
+
+def _chunk(buf, slot, j: int, tile: Tuple[int, ...], group: int):
+    rows = tile[0] // group
+    return buf.at[slot, pl.ds(j * rows, rows)]
+
+
+def _start_loads(stream: LoadStream, buf, sem, ctx, t, slot):
+    srcs = _as_group(stream.src(ctx, t), stream.group)
+    if stream.group == 1:
+        pltpu.make_async_copy(srcs[0], buf.at[slot], sem.at[slot]).start()
+        return
+    for j, src in enumerate(srcs):
+        pltpu.make_async_copy(src, _chunk(buf, slot, j, stream.tile,
+                                          stream.group), sem.at[slot]).start()
+
+
+def _wait_group(stream, buf, sem, slot):
+    """Wait out a slot's outstanding copies (self-copy shaped waits): the
+    arrival wait for a LoadStream, the drain for a StoreStream."""
+    if stream.group == 1:
+        pltpu.make_async_copy(buf.at[slot], buf.at[slot], sem.at[slot]).wait()
+        return
+    for j in range(stream.group):
+        c = _chunk(buf, slot, j, stream.tile, stream.group)
+        pltpu.make_async_copy(c, c, sem.at[slot]).wait()
+
+
+def _start_stores(stream: StoreStream, buf, sem, ctx, t, slot):
+    dsts = _as_group(stream.dst(ctx, t), stream.group)
+    if stream.group == 1:
+        pltpu.make_async_copy(buf.at[slot], dsts[0], sem.at[slot]).start()
+        return
+    for j, dst in enumerate(dsts):
+        pltpu.make_async_copy(_chunk(buf, slot, j, stream.tile, stream.group),
+                              dst, sem.at[slot]).start()
+
+
+# ------------------------------------------------------- in-kernel engine
+
+
+def coro_pipeline(
+    spec: CoroSpec,
+    ctx: CoroRefs,
+    load_bufs: Sequence,
+    store_bufs: Sequence,
+    load_sem,
+    store_sem,
+    *,
+    n_tiles: int,
+    depth: int,
+    body: Callable,
+    prologue: Optional[Callable] = None,
+    epilogue: Optional[Callable] = None,
+    carry_init: Any = 0,
+    grid_step: Any = None,
+):
+    """Drive a `CoroSpec` inside a Pallas kernel.
+
+    body(ctx, tile, slot, carry) -> carry  - the coroutine body; reads load
+        slots (`ctx.<stream>[slot]`), writes store slots, updates vars.
+    prologue(ctx) -> carry_init            - fori mode only: per-invocation
+        reset (accumulators, recurrent state) before warmup.
+    epilogue(ctx, carry)                   - fori mode only: after the final
+        store drain (normalize, write residual outputs).
+
+    Store semantics (the RMW pipeline shared by coro_scatter_add and
+    stream_copy): a slot's previous write-back is drained before the body
+    may rewrite the slot (`tile >= depth`), new write-backs start right
+    after the body, and every slot is drained once more when the rotation
+    retires — under `pl.when(grid_step == n_tiles - 1)` in grid mode.
     """
-    for j, r in enumerate(row_ids):
-        pltpu.make_async_copy(
-            hbm_ref.at[pl.ds(r, rows_per_copy)],
-            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
-            sem,
-        ).start()
+    if depth is None or depth <= 0:
+        raise ValueError(f"depth must be a positive int, got {depth}")
+    depth = min(depth, n_tiles)
+    if grid_step is not None and (prologue or epilogue):
+        raise ValueError("prologue/epilogue require fori mode (grid_step=None)")
+
+    def issue(t, slot):
+        for s, buf in zip(spec.loads, load_bufs):
+            _start_loads(s, buf, load_sem, ctx, t, slot)
+
+    def wait(t, slot):
+        for s, buf in zip(spec.loads, load_bufs):
+            _wait_group(s, buf, load_sem, slot)
+
+    def consume(t, slot, carry):
+        if spec.stores:
+            # drain the slot's previous write-back before the body rewrites it
+            @pl.when(t >= depth)
+            def _():
+                for s, buf in zip(spec.stores, store_bufs):
+                    _wait_group(s, buf, store_sem, slot)
+
+        carry = body(ctx, t, slot, carry)
+
+        for s, buf in zip(spec.stores, store_bufs):
+            _start_stores(s, buf, store_sem, ctx, t, slot)
+        return carry
+
+    if prologue is not None:
+        carry_init = prologue(ctx)
+
+    carry = coro_loop(n_tiles, depth, issue, consume, wait, carry_init,
+                      grid_step=grid_step)
+
+    if spec.stores:
+        # final drain: every slot has exactly one outstanding store at the
+        # end (earlier ones were drained before their buffer was rewritten)
+        def drain_all():
+            for slot in range(min(depth, n_tiles)):
+                for s, buf in zip(spec.stores, store_bufs):
+                    _wait_group(s, buf, store_sem, slot)
+
+        if grid_step is None:
+            drain_all()
+        else:
+            @pl.when(grid_step == n_tiles - 1)
+            def _():
+                drain_all()
+
+    if epilogue is not None:
+        epilogue(ctx, carry)
+    return carry
 
 
-def wait_rows(slot_buf, sem, n_copies: int, *, rows_per_copy: int = 1):
-    """Wait for an issue_rows group (one wait per constituent copy)."""
-    for j in range(n_copies):
-        pltpu.make_async_copy(
-            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
-            slot_buf.at[pl.ds(j * rows_per_copy, rows_per_copy)],
-            sem,
-        ).wait()
+# ---------------------------------------------------- entry-point builder
 
 
-def issue_block(hbm_ref, start, slot_buf, sem, *, rows: int):
-    """Coarse-grained request (paper §III-C case 1): one span DMA."""
-    pltpu.make_async_copy(hbm_ref.at[pl.ds(start, rows)], slot_buf, sem).start()
+def coro_call(
+    spec: CoroSpec,
+    *operands,
+    n_tiles: int,
+    depth: Optional[int],
+    body: Callable,
+    arg_names: Sequence[str],
+    grid: Tuple[int, ...],
+    in_specs,
+    out_specs,
+    out_shape,
+    drive_axis: Optional[int] = None,
+    prologue: Optional[Callable] = None,
+    epilogue: Optional[Callable] = None,
+    carry_init: Any = 0,
+    num_scalar_prefetch: int = 0,
+    input_output_aliases=None,
+    interpret: bool = False,
+):
+    """Build and run the Pallas call for a `CoroSpec` kernel.
 
+    `arg_names` names the kernel's operand refs in Pallas order (scalar-
+    prefetch args, then inputs, then outputs); spec callbacks see them as
+    `ctx.<name>`. `drive_axis` selects grid mode (that grid axis supplies
+    the tile loop) vs fori mode (None: the pipeline runs inside each kernel
+    invocation).
 
-def wait_block(slot_buf, sem):
-    pltpu.make_async_copy(slot_buf, slot_buf, sem).wait()
+    With `depth=None` the pipeline depth is solved by
+    `core.autotune.choose_depth` from the spec's tile profile, the VMEM cap
+    coming from the classified context bytes (`spec.all_vars()`); the
+    result is clamped to `n_tiles` and recorded under `spec.name` for
+    `autotune.last_choice`.
+    """
+    from repro.core import autotune  # local: autotune imports context only
 
+    if depth is None:
+        depth = autotune.choose_depth(spec.profile(), kernel=spec.name,
+                                      vars=spec.all_vars())
+        depth = min(int(depth), n_tiles)
+        # re-record post-clamp so last_choice reports the depth actually run
+        autotune.record_choice(spec.name, depth)
+    elif depth <= 0:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    depth = min(int(depth), n_tiles)
 
-def store_block(slot_buf, hbm_ref, start, sem, *, rows: int):
-    """astore analogue: decoupled write-back VMEM -> HBM."""
-    pltpu.make_async_copy(slot_buf, hbm_ref.at[pl.ds(start, rows)], sem).start()
+    n_outs = len(out_shape) if isinstance(out_shape, (list, tuple)) else 1
+    n_named = num_scalar_prefetch + len(in_specs) + n_outs
+    if len(arg_names) != n_named:
+        raise ValueError(
+            f"arg_names has {len(arg_names)} names for {n_named} operand refs")
+    if "pids" in arg_names:
+        raise ValueError("'pids' is reserved for the program-id tuple")
+    spec_names = {s.name for s in (*spec.loads, *spec.stores)} \
+        | {v.name for v in spec.vars} | {"pids"}
+    clash = spec_names & set(arg_names)
+    if clash:
+        raise ValueError(
+            f"arg_names collide with spec stream/var names: {sorted(clash)} "
+            "(the stream buffer would shadow the operand ref in ctx)")
 
+    loads, stores = spec.loads, spec.stores
+    shaped_vars = spec.materialized_vars()
+    scratch = spec.scratch_shapes(depth)
 
-def wait_store(slot_buf, hbm_ref, start, sem, *, rows: int):
-    pltpu.make_async_copy(slot_buf, hbm_ref.at[pl.ds(start, rows)], sem).wait()
+    def kernel(*refs):
+        named = dict(zip(arg_names, refs[:n_named]))
+        rest = list(refs[n_named:])
+        load_bufs = tuple(rest[:len(loads)])
+        del rest[:len(loads)]
+        store_bufs = tuple(rest[:len(stores)])
+        del rest[:len(stores)]
+        load_sem = rest.pop(0) if loads else None
+        store_sem = rest.pop(0) if stores else None
+        for v in shaped_vars:
+            named[v.name] = rest.pop(0)
+        assert not rest, "scratch ref count mismatch"
+        for s, buf in zip((*loads, *stores), (*load_bufs, *store_bufs)):
+            named[s.name] = buf
+        # program ids, evaluated once at kernel entry (they cannot be read
+        # from inside the fori-mode loop body): ctx.pids[axis]
+        named["pids"] = tuple(pl.program_id(a) for a in range(len(grid)))
+        ctx = CoroRefs(named)
+        grid_step = (pl.program_id(drive_axis)
+                     if drive_axis is not None else None)
+        coro_pipeline(spec, ctx, load_bufs, store_bufs, load_sem, store_sem,
+                      n_tiles=n_tiles, depth=depth, body=body,
+                      prologue=prologue, epilogue=epilogue,
+                      carry_init=carry_init, grid_step=grid_step)
+
+    kwargs = {}
+    if input_output_aliases is not None:
+        kwargs["input_output_aliases"] = input_output_aliases
+    if num_scalar_prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=num_scalar_prefetch,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        )
+        call = pl.pallas_call(kernel, grid_spec=grid_spec,
+                              out_shape=out_shape, interpret=interpret,
+                              **kwargs)
+    else:
+        call = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                              out_specs=out_specs, out_shape=out_shape,
+                              scratch_shapes=scratch, interpret=interpret,
+                              **kwargs)
+    return call(*operands)

@@ -49,7 +49,8 @@ def tile_transfer_s(p: TileProfile) -> float:
 
 def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
                 vmem_budget: int = VMEM_BYTES,
-                slot_limit: int = REQUEST_SLOTS) -> int:
+                slot_limit: int = REQUEST_SLOTS,
+                vmem_cap: Optional[int] = None) -> int:
     """Smallest depth that hides `latency_s`, capped by VMEM and slot count.
 
     Hiding condition (paper §II insight, adapted): while one tile's DMA is in
@@ -66,12 +67,21 @@ def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
     request-slot bound the paper's dynamic scheduler is capped by (unlike
     the static baseline's MSHR cap it is a property of the pipeline's own
     context arena, not the core) — it also bounds the unrolled warmup code.
+
+    `vmem_cap` overrides the profile-derived capacity cap with an externally
+    classified one: `core.autotune.choose_depth` passes
+    `context.max_depth(spec.vars, vmem_budget)` here so the VMEM bound comes
+    from the §III-B classification (private x depth, shared x 1) instead of
+    the hand-filled profile byte counts.
     """
     tc = max(tile_compute_s(p), 1e-12)
     service = max(tc, tile_transfer_s(p))
     need = math.ceil((latency_s + tile_transfer_s(p)) / service) + 1
-    per_slot = p.tile_bytes + p.private_bytes
-    cap = max((vmem_budget - p.shared_bytes) // max(per_slot, 1), 1)
+    if vmem_cap is not None:
+        cap = vmem_cap
+    else:
+        per_slot = p.tile_bytes + p.private_bytes
+        cap = max((vmem_budget - p.shared_bytes) // max(per_slot, 1), 1)
     return int(max(2, min(need, cap, slot_limit)))
 
 
@@ -92,14 +102,16 @@ def achieved_bandwidth(p: TileProfile, depth: int,
 def adaptive_depth(p: TileProfile, latency_samples_s: Sequence[float],
                    *, quantile: float = 0.95,
                    vmem_budget: int = VMEM_BYTES,
-                   slot_limit: int = REQUEST_SLOTS) -> int:
+                   slot_limit: int = REQUEST_SLOTS,
+                   vmem_cap: Optional[int] = None) -> int:
     """Dynamic-scheduler analogue: re-solve depth from observed latencies."""
     if not latency_samples_s:
-        return solve_depth(p, vmem_budget=vmem_budget, slot_limit=slot_limit)
+        return solve_depth(p, vmem_budget=vmem_budget, slot_limit=slot_limit,
+                           vmem_cap=vmem_cap)
     xs = sorted(latency_samples_s)
     q = xs[min(int(quantile * len(xs)), len(xs) - 1)]
     return solve_depth(p, latency_s=q, vmem_budget=vmem_budget,
-                       slot_limit=slot_limit)
+                       slot_limit=slot_limit, vmem_cap=vmem_cap)
 
 
 def static_prefetch_depth(p: TileProfile, *, latency_s: float,

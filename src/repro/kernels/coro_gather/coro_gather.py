@@ -1,46 +1,56 @@
-"""Coroutine gather kernel: random-row gather with decoupled DMA pipeline.
+"""Coroutine gather kernel: random-row gather declared as a `CoroSpec`.
 
 The paper's flagship pattern (GUPS read side, hash-join probe, embedding
-lookup). Each grid step consumes one tile of `rows_per_tile` gathered rows;
-`depth` tiles are in flight at once, each tile's rows being an `aset` group
-of row-DMAs bound to one slot semaphore. Both variants drive
-`core.coro.coro_loop` in grid mode — the warmup/rotation schedule lives in
-the substrate, only the issue/wait/consume callbacks differ:
+lookup). Each grid step consumes one tile of gathered rows; `depth` tiles
+are in flight at once. Both variants are pure declarations — one
+`LoadStream` plus a two-line body — and ride `core.coro.coro_call` in grid
+mode, which derives the slot scratch, DMA semaphores, and the
+warmup/rotation schedule from the spec:
 
-  * row gather  — one DMA per requested row (uncoalesced aset group).
+  * row gather  — one DMA per requested row (an aset group of
+    `rows_per_tile` copies bound to one slot semaphore).
   * span gather — one DMA per `span` contiguous rows (the coarse-grained
     request of §III-C; fed by core.descriptors.plan_gather).
 
-With ``depth=None`` the entry points solve the depth from the tile's
-profile via core.autotune (latency-aware, VMEM-capped).
+With ``depth=None`` the entry points solve the depth from the spec's tile
+profile via core.autotune (latency-aware, VMEM cap from the classified
+context bytes).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop, issue_rows, wait_block, wait_rows
+from repro.core.coro import CoroSpec, LoadStream, coro_call
 
 
-def _row_gather_kernel(idx_ref, table_ref, out_ref, slots, sems, *,
-                       depth: int, rows_per_tile: int, n_tiles: int):
-    def issue(tile, slot):
-        rows = [idx_ref[tile * rows_per_tile + j] for j in range(rows_per_tile)]
-        issue_rows(table_ref, rows, slots.at[slot], sems.at[slot])
+def row_gather_spec(rows_per_tile: int, d: int, dtype) -> CoroSpec:
+    """One tile = `rows_per_tile` single-row DMAs (an aset group)."""
+    return CoroSpec(
+        name="row_gather",
+        loads=(LoadStream(
+            "rows", (rows_per_tile, d), dtype,
+            src=lambda ctx, t: [
+                ctx.table.at[pl.ds(ctx.idx[t * rows_per_tile + j], 1)]
+                for j in range(rows_per_tile)
+            ],
+            group=rows_per_tile,
+        ),),
+        flops_per_tile=float(rows_per_tile * d),
+    )
 
-    def wait(tile, slot):
-        wait_rows(slots.at[slot], sems.at[slot], rows_per_tile)
 
-    def consume(tile, slot, carry):
-        out_ref[...] = slots[slot]
-        return carry
-
-    coro_loop(n_tiles, depth, issue, consume, wait, grid_step=pl.program_id(0))
+def span_gather_spec(span: int, d: int, dtype) -> CoroSpec:
+    """One tile = one coarse-grained span DMA (paper §III-C case 1)."""
+    return CoroSpec(
+        name="span_gather",
+        loads=(LoadStream(
+            "span", (span, d), dtype,
+            src=lambda ctx, t: ctx.table.at[pl.ds(ctx.starts[t], span)],
+        ),),
+        flops_per_tile=float(span * d),
+    )
 
 
 def row_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
@@ -50,51 +60,23 @@ def row_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
     assert n % rows_per_tile == 0, (n, rows_per_tile)
     n_tiles = n // rows_per_tile
     d = table.shape[1]
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_row_gather(rows_per_tile, d, table.dtype.itemsize),
-            kernel="row_gather")
-    depth = min(depth, n_tiles)
+    spec = row_gather_spec(rows_per_tile, d, table.dtype)
 
-    kernel = functools.partial(
-        _row_gather_kernel, depth=depth, rows_per_tile=rows_per_tile,
-        n_tiles=n_tiles,
-    )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_tiles,),
-        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=pl.BlockSpec((rows_per_tile, d), lambda i, idx_ref: (i, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
-        interpret=interpret,
-    )(idx, table)
-
-
-def _span_gather_kernel(starts_ref, table_ref, out_ref, slots, sems, *,
-                        depth: int, span: int, n_tiles: int):
-    def issue(tile, slot):
-        pltpu.make_async_copy(
-            table_ref.at[pl.ds(starts_ref[tile], span)],
-            slots.at[slot],
-            sems.at[slot],
-        ).start()
-
-    def wait(tile, slot):
-        wait_block(slots.at[slot], sems.at[slot])
-
-    def consume(tile, slot, carry):
-        out_ref[...] = slots[slot]
+    def body(ctx, t, slot, carry):
+        ctx.out[...] = ctx.rows[slot]
         return carry
 
-    coro_loop(n_tiles, depth, issue, consume, wait, grid_step=pl.program_id(0))
+    return coro_call(
+        spec, idx, table,
+        n_tiles=n_tiles, depth=depth, body=body,
+        arg_names=("idx", "table", "out"),
+        grid=(n_tiles,), drive_axis=0,
+        num_scalar_prefetch=1,
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((rows_per_tile, d), lambda i, idx_ref: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )
 
 
 def span_gather(table, starts, *, span: int = 8, depth: int | None = None,
@@ -102,30 +84,22 @@ def span_gather(table, starts, *, span: int = 8, depth: int | None = None,
     """out[i*span:(i+1)*span] = table[starts[i]:starts[i]+span]."""
     n_tiles = starts.shape[0]
     d = table.shape[1]
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_span_gather(span, d, table.dtype.itemsize),
-            kernel="span_gather")
-    depth = min(depth, max(n_tiles, 1))
     if n_tiles == 0:
         return jnp.zeros((0, d), table.dtype)
+    spec = span_gather_spec(span, d, table.dtype)
 
-    kernel = functools.partial(
-        _span_gather_kernel, depth=depth, span=span, n_tiles=n_tiles,
-    )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    def body(ctx, t, slot, carry):
+        ctx.out[...] = ctx.span[slot]
+        return carry
+
+    return coro_call(
+        spec, starts, table,
+        n_tiles=n_tiles, depth=depth, body=body,
+        arg_names=("starts", "table", "out"),
+        grid=(n_tiles,), drive_axis=0,
         num_scalar_prefetch=1,
-        grid=(n_tiles,),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec((span, d), lambda i, starts_ref: (i, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((depth, span, d), table.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles * span, d), table.dtype),
         interpret=interpret,
-    )(starts, table)
+    )

@@ -1,11 +1,11 @@
 """Public ops for the coroutine gather: padding, coalescing, auto-depth.
 
 ``depth=None`` on either entry point solves the pipeline depth from the
-tile's `TileProfile` via core.autotune (= `schedule.solve_depth` until
-transfer samples are recorded — see autotune.record_transfer). The
-coalesced path threads the same auto-depth into both sub-pipelines, so
-span DMAs and single-row aset groups share one tuned substrate codepath
-(`core.coro.coro_loop`).
+declared `CoroSpec`'s tile profile via core.autotune (VMEM cap from the
+classified context bytes; adaptive once transfer samples are recorded —
+see autotune.record_transfer). The coalesced path threads the same
+auto-depth into both sub-pipelines, so span DMAs and single-row aset
+groups share one declarative substrate codepath (`core.coro.coro_call`).
 """
 from __future__ import annotations
 
@@ -41,9 +41,9 @@ def coalesced_gather(table, idx: np.ndarray, *, span: int = 8,
 
     `idx` is host data (the plan is a compile-time pass, like the paper's
     greedy basic-block scheduling). Returns (out, plan) so callers can report
-    the coalescing ratio. Both sub-pipelines ride `coro_loop`; each solves
+    the coalescing ratio. Both sub-pipelines ride `coro_call`; each solves
     its own depth when `depth` is None (span tiles and row tiles have
-    different profiles).
+    different specs).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     plan = plan_gather(np.asarray(idx), span=span)

@@ -1,12 +1,14 @@
-"""Coroutine scatter-add: pipelined read-modify-write with decoupled DMA.
+"""Coroutine scatter-add: pipelined read-modify-write as a `CoroSpec`.
 
 GUPS's update side (and embedding-gradient / histogram scatter). Each tile:
   aload rows -> wait -> add updates -> astore rows -> (slot reused later)
 
-The warmup/rotation schedule is `core.coro.coro_loop` in grid mode; the
-RMW-specific store pipeline lives in the consume callback (drain the slot's
-previous store, compute, start the new store) plus an epilogue drain after
-the rotation retires.
+The kernel is a declaration: one `LoadStream` reading the target rows, one
+`StoreStream` writing them back, and a one-line body. All RMW plumbing —
+drain-the-slot's-previous-store before the body rewrites it, start the new
+write-back after, epilogue drain once the rotation retires — is the
+substrate's shared `StoreStream` path (`core.coro.coro_pipeline`), the same
+code stream_copy rides.
 
 Hazards:
   * duplicate rows across in-flight tiles would race; the paper serializes
@@ -14,73 +16,34 @@ Hazards:
     transform in ops.py (each row is written exactly once; see
     core.descriptors.dedup_rmw).
   * slot reuse: a slot's next load may overwrite data still being stored.
-    in_slots/out_slots are separate, and the store semaphore is awaited
-    before the slot's output buffer is rewritten.
+    Load and store streams get separate slot buffers, and the store
+    semaphore is drained before the slot's output buffer is rewritten.
 
 The table is updated in place via input_output_aliasing (the SPM region the
 paper manages in L2 is the VMEM slot set here; HBM is the far memory).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop, issue_rows, wait_rows
+from repro.core.coro import CoroSpec, LoadStream, StoreStream, coro_call
 
 
-def _scatter_add_kernel(idx_ref, table_ref, upd_ref, out_ref, in_slots,
-                        out_slots, load_sems, store_sems, *, depth: int,
-                        rows_per_tile: int, n_tiles: int):
-    i = pl.program_id(0)
+def scatter_add_spec(rows_per_tile: int, d: int, dtype) -> CoroSpec:
+    """RMW tile: rows are loaded AND stored (2x traffic, 2x slot VMEM)."""
+    def row_slices(ctx, t):
+        return [ctx.out.at[pl.ds(ctx.idx[t * rows_per_tile + j], 1)]
+                for j in range(rows_per_tile)]
 
-    def rows_of(tile):
-        return [idx_ref[tile * rows_per_tile + j] for j in range(rows_per_tile)]
-
-    def issue_load(tile, slot):
-        issue_rows(out_ref, rows_of(tile), in_slots.at[slot], load_sems.at[slot])
-
-    def start_store(tile, slot):
-        for j, r in enumerate(rows_of(tile)):
-            pltpu.make_async_copy(
-                out_slots.at[slot, pl.ds(j, 1)],
-                out_ref.at[pl.ds(r, 1)],
-                store_sems.at[slot],
-            ).start()
-
-    def wait_store(slot):
-        for j in range(rows_per_tile):
-            pltpu.make_async_copy(
-                out_slots.at[slot, pl.ds(j, 1)],
-                out_slots.at[slot, pl.ds(j, 1)],
-                store_sems.at[slot],
-            ).wait()
-
-    def wait_load(tile, slot):
-        wait_rows(in_slots.at[slot], load_sems.at[slot], rows_per_tile)
-
-    def consume(tile, slot, carry):
-        # drain the slot's previous store before rewriting its output buffer
-        @pl.when(tile >= depth)
-        def _():
-            wait_store(slot)
-
-        out_slots[slot] = in_slots[slot] + upd_ref[...]
-        start_store(tile, slot)
-        return carry
-
-    coro_loop(n_tiles, depth, issue_load, consume, wait_load, grid_step=i)
-
-    # final drain: every slot has exactly one outstanding store at the end
-    # (earlier ones were drained before their buffer was rewritten)
-    @pl.when(i == n_tiles - 1)
-    def _():
-        for s in range(min(depth, n_tiles)):
-            wait_store(s)
+    return CoroSpec(
+        name="scatter_add",
+        loads=(LoadStream("cur", (rows_per_tile, d), dtype,
+                          src=row_slices, group=rows_per_tile),),
+        stores=(StoreStream("acc", (rows_per_tile, d), dtype,
+                            dst=row_slices, group=rows_per_tile),),
+        flops_per_tile=float(2 * rows_per_tile * d),
+    )
 
 
 def scatter_add_unique(table, idx, updates, *, depth: int | None = None,
@@ -90,35 +53,24 @@ def scatter_add_unique(table, idx, updates, *, depth: int | None = None,
     assert n % rows_per_tile == 0
     n_tiles = n // rows_per_tile
     d = table.shape[1]
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_scatter_add(rows_per_tile, d, table.dtype.itemsize),
-            kernel="scatter_add")
-    depth = min(depth, n_tiles)
+    spec = scatter_add_spec(rows_per_tile, d, table.dtype)
 
-    kernel = functools.partial(
-        _scatter_add_kernel, depth=depth, rows_per_tile=rows_per_tile,
-        n_tiles=n_tiles,
-    )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    def body(ctx, t, slot, carry):
+        ctx.acc[slot] = ctx.cur[slot] + ctx.upd[...]
+        return carry
+
+    return coro_call(
+        spec, idx, table, updates,
+        n_tiles=n_tiles, depth=depth, body=body,
+        arg_names=("idx", "table", "upd", "out"),
+        grid=(n_tiles,), drive_axis=0,
         num_scalar_prefetch=1,
-        grid=(n_tiles,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),   # table (aliased to out)
             pl.BlockSpec((rows_per_tile, d), lambda i, idx_ref: (i, 0)),  # updates
         ],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=[
-            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
-            pltpu.VMEM((depth, rows_per_tile, d), table.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-            pltpu.SemaphoreType.DMA((depth,)),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
         input_output_aliases={1: 0},  # table (operand 1 incl. prefetch) -> out
         interpret=interpret,
-    )(idx, table, updates)
+    )

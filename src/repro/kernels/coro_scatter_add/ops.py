@@ -1,4 +1,9 @@
-"""Public scatter-add op: dedup (await/asignal analogue) + pipelined RMW."""
+"""Public scatter-add op: dedup (await/asignal analogue) + pipelined RMW.
+
+The RMW store pipeline itself (drain-before-reuse + epilogue drain) is the
+substrate's shared `StoreStream` path — declared in
+`coro_scatter_add.scatter_add_spec`, implemented once in `core.coro`.
+"""
 from __future__ import annotations
 
 import jax

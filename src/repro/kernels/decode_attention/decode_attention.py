@@ -1,4 +1,4 @@
-"""Flash-decode kernel: KV-cache streaming with the coroutine pipeline.
+"""Flash-decode kernel: KV-cache streaming declared as a `CoroSpec`.
 
 One decode token attends over a long KV cache living in HBM ("far memory").
 Each KV block is one coroutine: its k/v DMAs form an aset group on a slot
@@ -6,67 +6,58 @@ semaphore; while block i is in flight, blocks i-1..i-depth+1 are being
 consumed by the online-softmax accumulator. This is the paper's pattern at
 its purest — latency-bound streaming with O(1) compute per byte — and the
 kernel the serving path uses on TPU (jnp twin: models.common.decode_attention).
-The pipeline schedule is `core.coro.coro_loop` in fori mode; only the
-issue/wait/consume callbacks are kernel-specific.
+
+The declaration carries the kernel's whole §III-B context: the k/v slot
+buffers are private (x depth, derived by the builder), while the m/l/acc
+online-softmax accumulators are *commutative* updates — classified SHARED,
+allocated once regardless of depth — and q is a read-only resident counted
+against the budget but materialized from the operand block. The pipeline is
+`core.coro.coro_call` in fori mode.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop
+from repro.core import context as ctx_mod
+from repro.core.coro import CoroSpec, LoadStream, coro_call
 
 NEG_INF = -1e30
 
 
-def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, k_slots, v_slots,
-                   sems, m_s, l_s, acc_s, *, depth: int, blk: int,
-                   n_blocks: int, kh: int, g: int, d: int):
-    b = pl.program_id(0)
-    pos = pos_ref[0]
+def decode_spec(blk: int, kh: int, g: int, d: int, dtype) -> CoroSpec:
+    """KV block tile: k+v DMAs per slot; accumulators are depth-independent."""
+    h = kh * g
 
-    def issue(blk_i, slot):
-        start = blk_i * blk
-        pltpu.make_async_copy(k_ref.at[b, pl.ds(start, blk)], k_slots.at[slot],
-                              sems.at[slot]).start()
-        pltpu.make_async_copy(v_ref.at[b, pl.ds(start, blk)], v_slots.at[slot],
-                              sems.at[slot]).start()
+    def kv_src(ref_name):
+        def src(ctx, i):
+            ref = getattr(ctx, ref_name)
+            return ref.at[ctx.pids[0], pl.ds(i * blk, blk)]
+        return src
 
-    def wait(blk_i, slot):
-        pltpu.make_async_copy(k_slots.at[slot], k_slots.at[slot],
-                              sems.at[slot]).wait()
-        pltpu.make_async_copy(v_slots.at[slot], v_slots.at[slot],
-                              sems.at[slot]).wait()
-
-    # fresh accumulators for this batch element
-    m_s[...] = jnp.full_like(m_s, NEG_INF)
-    l_s[...] = jnp.zeros_like(l_s)
-    acc_s[...] = jnp.zeros_like(acc_s)
-
-    q = q_ref[0].reshape(kh, g, d).astype(jnp.float32) * (d ** -0.5)
-
-    def consume(i, slot, carry):
-        k = k_slots[slot].astype(jnp.float32)   # [blk, kh, d]
-        v = v_slots[slot].astype(jnp.float32)
-        s = jnp.einsum("kgd,bkd->kgb", q, k)    # [kh, g, blk]
-        kpos = i * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
-        s = jnp.where(kpos <= pos, s, NEG_INF)
-        m_new = jnp.maximum(m_s[...], s.max(axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m_s[...] - m_new)
-        l_s[...] = l_s[...] * corr + p.sum(axis=-1)
-        acc_s[...] = acc_s[...] * corr[..., None] + jnp.einsum("kgb,bkd->kgd", p, v)
-        m_s[...] = m_new
-        return carry
-
-    coro_loop(n_blocks, depth, issue, consume, wait)
-    out = acc_s[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
-    o_ref[...] = out.reshape(1, kh * g, d).astype(o_ref.dtype)
+    return CoroSpec(
+        name="flash_decode",
+        loads=(
+            LoadStream("k", (blk, kh, d), dtype, src=kv_src("k_hbm")),
+            LoadStream("v", (blk, kh, d), dtype, src=kv_src("v_hbm")),
+        ),
+        vars=(
+            # online-softmax state: commutative (max / rescaled-sum)
+            # reductions -> SHARED, one copy regardless of depth
+            ctx_mod.var("m", (kh, g), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            ctx_mod.var("l", (kh, g), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            ctx_mod.var("acc", (kh, g, d), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            # the scaled query: read-only resident (operand block + f32 copy
+            # in the loop carry); accounting-only, no scratch of its own
+            ctx_mod.VarSpec("q_f32", nbytes=4 * (h * d + kh * g * d),
+                            read_only=True),
+        ),
+        flops_per_tile=float(4 * blk * h * d),  # qk + pv per block
+    )
 
 
 def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128,
@@ -77,37 +68,49 @@ def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128,
     assert s % blk == 0
     n_blocks = s // blk
     g = h // kh
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_decode(blk, kh, g, d, k_cache.dtype.itemsize),
-            kernel="flash_decode")
-    depth = min(depth, n_blocks)
+    spec = decode_spec(blk, kh, g, d, k_cache.dtype)
 
-    kernel = functools.partial(
-        _decode_kernel, depth=depth, blk=blk, n_blocks=n_blocks,
-        kh=kh, g=g, d=d,
-    )
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+    def prologue(ctx):
+        # fresh accumulators for this batch element
+        ctx.m[...] = jnp.full_like(ctx.m, NEG_INF)
+        ctx.l[...] = jnp.zeros_like(ctx.l)
+        ctx.acc[...] = jnp.zeros_like(ctx.acc)
+        qv = ctx.q_in[0].reshape(kh, g, d).astype(jnp.float32) * (d ** -0.5)
+        return (qv, ctx.pos[0])
+
+    def body(ctx, i, slot, carry):
+        qv, pos_v = carry
+        k = ctx.k[slot].astype(jnp.float32)   # [blk, kh, d]
+        v = ctx.v[slot].astype(jnp.float32)
+        sc = jnp.einsum("kgd,bkd->kgb", qv, k)    # [kh, g, blk]
+        kpos = i * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
+        sc = jnp.where(kpos <= pos_v, sc, NEG_INF)
+        m_new = jnp.maximum(ctx.m[...], sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(ctx.m[...] - m_new)
+        ctx.l[...] = ctx.l[...] * corr + p.sum(axis=-1)
+        ctx.acc[...] = (ctx.acc[...] * corr[..., None]
+                        + jnp.einsum("kgb,bkd->kgd", p, v))
+        ctx.m[...] = m_new
+        return carry
+
+    def epilogue(ctx, carry):
+        out = ctx.acc[...] / jnp.maximum(ctx.l[...], 1e-30)[..., None]
+        ctx.o[...] = out.reshape(1, kh * g, d).astype(ctx.o.dtype)
+
+    return coro_call(
+        spec, jnp.asarray([pos], jnp.int32), q, k_cache, v_cache,
+        n_tiles=n_blocks, depth=depth, body=body,
+        prologue=prologue, epilogue=epilogue,
+        arg_names=("pos", "q_in", "k_hbm", "v_hbm", "o"),
         grid=(bsz,),
+        num_scalar_prefetch=1,
         in_specs=[
             pl.BlockSpec((1, h, d), lambda b, pos_ref: (b, 0, 0)),
             pl.BlockSpec(memory_space=pl.ANY),
             pl.BlockSpec(memory_space=pl.ANY),
         ],
         out_specs=pl.BlockSpec((1, h, d), lambda b, pos_ref: (b, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((depth, blk, kh, d), k_cache.dtype),
-            pltpu.VMEM((depth, blk, kh, d), v_cache.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-            pltpu.VMEM((kh, g), jnp.float32),
-            pltpu.VMEM((kh, g), jnp.float32),
-            pltpu.VMEM((kh, g, d), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
         interpret=interpret,
-    )(jnp.asarray([pos], jnp.int32), q, k_cache, v_cache)
+    )

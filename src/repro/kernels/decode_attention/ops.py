@@ -1,8 +1,9 @@
 """Public flash-decode op with latency-aware depth selection.
 
-``depth=None`` solves the pipeline depth from the KV-block `TileProfile`
-via core.autotune (exactly `schedule.solve_depth` until transfer samples
-are recorded; see autotune.record_transfer).
+``depth=None`` solves the pipeline depth from the KV-block `CoroSpec`
+(`decode_attention.decode_spec`) via core.autotune — the VMEM cap comes
+from the classified context bytes (shared online-softmax accumulators
+don't multiply by depth), adaptive once transfer samples are recorded.
 """
 from __future__ import annotations
 

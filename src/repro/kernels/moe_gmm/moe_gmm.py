@@ -1,50 +1,48 @@
-"""Grouped matmul for MoE experts with streamed weight tiles.
+"""Grouped matmul for MoE experts: streamed weight tiles as a `CoroSpec`.
 
 In expert-parallel MoE the *weights* are the far-memory objects: each local
 expert's [dm, f] matrix is streamed HBM->VMEM tile-by-tile while the MXU
 consumes the previous tile — the coroutine pipeline with weight tiles as the
 in-flight context (CoroAMU's HJ build side). Each tile is a strided DMA
 window [dm, f_tile] of the expert's weight matrix (no host-side relayout:
-the weights stream from their native [E, dm, f] layout); the pipeline is
-`core.coro.coro_loop` in fori mode with `depth` weight tiles in flight
-(``depth=None`` solves it from the tile profile via core.autotune),
-replacing the fixed double-buffering BlockSpec supplied before.
+the weights stream from their native [E, dm, f] layout). The declaration is
+one `LoadStream` plus accounting vars for the depth-independent residents
+(the token block and the expert's full output block, both hint-SHARED); the
+pipeline is `core.coro.coro_call` in fori mode with `depth` weight tiles in
+flight (``depth=None`` solves it from the spec's profile via core.autotune).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop, wait_block
+from repro.core import context as ctx_mod
+from repro.core.coro import CoroSpec, LoadStream, coro_call
 
 
-def _gmm_kernel(t_ref, w_ref, o_ref, slots, sems, *, depth: int,
-                f_tile: int, n_tiles: int):
-    e_i = pl.program_id(0)
-
-    def issue(tile, slot):
-        pltpu.make_async_copy(
-            w_ref.at[e_i, :, pl.ds(tile * f_tile, f_tile)],
-            slots.at[slot], sems.at[slot]).start()
-
-    def wait(tile, slot):
-        wait_block(slots.at[slot], sems.at[slot])
-
-    tokens = t_ref[0]  # [c, dm]
-
-    def consume(tile, slot, carry):
-        o_ref[0, :, pl.ds(tile * f_tile, f_tile)] = jnp.einsum(
-            "cd,df->cf", tokens, slots[slot],
-            preferred_element_type=jnp.float32,
-        ).astype(o_ref.dtype)
-        return carry
-
-    coro_loop(n_tiles, depth, issue, consume, wait)
+def gmm_spec(c: int, dm: int, f_tile: int, dtype,
+             *, f_total: int | None = None) -> CoroSpec:
+    """Streamed expert-weight tile; the token block AND the expert's full
+    [c, f] output block are depth-independent VMEM residents."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return CoroSpec(
+        name="moe_gmm",
+        loads=(LoadStream(
+            "w", (dm, f_tile), dtype,
+            src=lambda ctx, t: ctx.w_hbm.at[ctx.pids[0], :,
+                                            pl.ds(t * f_tile, f_tile)],
+        ),),
+        vars=(
+            # operand/output blocks resident across the whole expert:
+            # accounting-only (materialized by the BlockSpecs, not scratch)
+            ctx_mod.VarSpec("tokens", nbytes=c * dm * itemsize,
+                            read_only=True),
+            ctx_mod.VarSpec("y_block", nbytes=c * (f_total or f_tile) * itemsize,
+                            hint=ctx_mod.VarClass.SHARED),
+        ),
+        flops_per_tile=float(2 * c * dm * f_tile),
+    )
 
 
 def gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
@@ -54,17 +52,22 @@ def gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
     f = weights.shape[-1]
     assert f % f_tile == 0
     n_tiles = f // f_tile
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_gmm(c, dm, f_tile, weights.dtype.itemsize,
-                                 f_total=f),
-            kernel="moe_gmm")
-    depth = min(depth, n_tiles)
+    spec = gmm_spec(c, dm, f_tile, weights.dtype, f_total=f)
 
-    kernel = functools.partial(_gmm_kernel, depth=depth, f_tile=f_tile,
-                               n_tiles=n_tiles)
-    return pl.pallas_call(
-        kernel,
+    def prologue(ctx):
+        return ctx.t[0]  # [c, dm] token block for this expert
+
+    def body(ctx, t, slot, carry):
+        ctx.o[0, :, pl.ds(t * f_tile, f_tile)] = jnp.einsum(
+            "cd,df->cf", carry, ctx.w[slot],
+            preferred_element_type=jnp.float32,
+        ).astype(ctx.o.dtype)
+        return carry
+
+    return coro_call(
+        spec, tokens, weights,
+        n_tiles=n_tiles, depth=depth, body=body, prologue=prologue,
+        arg_names=("t", "w_hbm", "o"),
         grid=(e,),
         in_specs=[
             pl.BlockSpec((1, c, dm), lambda i: (i, 0, 0)),
@@ -72,9 +75,5 @@ def gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
         ],
         out_specs=pl.BlockSpec((1, c, f), lambda i: (i, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), tokens.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((depth, dm, f_tile), weights.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-        ],
         interpret=interpret,
-    )(tokens, weights)
+    )

@@ -1,8 +1,8 @@
 """Public grouped-matmul op.
 
-``depth=None`` solves the number of in-flight weight tiles from the tile's
-`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
-samples are recorded).
+``depth=None`` solves the number of in-flight weight tiles from the
+declared `CoroSpec` (`moe_gmm.gmm_spec`) via core.autotune, with the VMEM
+cap taken from the classified context bytes.
 """
 from __future__ import annotations
 

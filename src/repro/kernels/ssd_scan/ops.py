@@ -1,8 +1,9 @@
 """Public SSD-scan op.
 
-``depth=None`` solves the number of in-flight chunk loads from the chunk's
-`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
-samples are recorded).
+``depth=None`` solves the number of in-flight chunk loads from the
+declared `CoroSpec` (`ssd_scan.ssd_spec`) via core.autotune — the
+sequential recurrent state is one copy regardless of depth, so it caps
+the budget once, not per slot.
 """
 from __future__ import annotations
 

@@ -1,86 +1,60 @@
-"""Chunked SSD (Mamba-2) scan kernel with streaming state.
+"""Chunked SSD (Mamba-2) scan kernel declared as a `CoroSpec`.
 
-Grid = (batch,): each grid step scans one sequence; the recurrent state
-[H,P,N] lives in VMEM scratch across chunks (the paper's "sequential"
-variable class — core/context.py, one copy regardless of depth) and resets
-at each batch element. Chunk inputs (x, dt, B, C) stream HBM->VMEM through
-`core.coro.coro_loop` in fori mode: each chunk's four DMAs form one aset
-group on a slot semaphore and `depth` chunks are in flight while earlier
-chunks compute — the same decoupled issue/wait substrate as the manual
-gather kernels, replacing the compiler-chosen BlockSpec double-buffering
-(``depth=None`` solves the depth from the chunk profile via core.autotune).
+Grid = (batch,): each grid step scans one sequence. Chunk inputs (x, dt, B,
+C) are four `LoadStream`s — each chunk's four DMAs form one aset group on a
+slot semaphore and `depth` chunks are in flight while earlier chunks
+compute. The recurrent state [H,P,N] is declared as a *sequential* context
+var (order-dependent update — core/context.py classifies it one-copy,
+depth-independent) and the builder derives its scratch; it resets at each
+batch element in the prologue. ``depth=None`` solves the depth from the
+spec's chunk profile via core.autotune.
 
 Note the intra-chunk math is order-free; only the [H,P,N] state carries the
 sequential dependence, so deep pipelining of chunk *loads* is safe.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop, wait_block
+from repro.core import context as ctx_mod
+from repro.core.coro import CoroSpec, LoadStream, coro_call
 
 
-def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
-                x_slots, dt_slots, b_slots, c_slots, sems, h_s, *,
-                depth: int, chunk: int, nh: int, p: int, n: int,
-                n_chunks: int):
-    b_i = pl.program_id(0)
+def ssd_spec(chunk: int, nh: int, p: int, n: int, dtype,
+             *, seq_len: int | None = None) -> CoroSpec:
+    """Chunk tile: x/dt/B/C stream per slot; the recurrent state is
+    sequential (one copy) and the per-batch y/h-out blocks are residents."""
+    itemsize = jnp.dtype(dtype).itemsize
 
-    def issue(tile, slot):
-        start = tile * chunk
-        for ref, buf in ((x_ref, x_slots), (dt_ref, dt_slots),
-                         (b_ref, b_slots), (c_ref, c_slots)):
-            pltpu.make_async_copy(ref.at[b_i, pl.ds(start, chunk)],
-                                  buf.at[slot], sems.at[slot]).start()
+    def chunk_src(ref_name):
+        def src(ctx, t):
+            ref = getattr(ctx, ref_name)
+            return ref.at[ctx.pids[0], pl.ds(t * chunk, chunk)]
+        return src
 
-    def wait(tile, slot):
-        for buf in (x_slots, dt_slots, b_slots, c_slots):
-            wait_block(buf.at[slot], sems.at[slot])
-
-    h_s[...] = jnp.zeros_like(h_s)  # fresh state per batch element
-    A = a_ref[...].astype(jnp.float32)         # [nh]
-    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
-
-    def consume(tile, slot, carry):
-        x = x_slots[slot].astype(jnp.float32)    # [chunk, nh, p]
-        dt = dt_slots[slot].astype(jnp.float32)  # [chunk, nh]
-        B = b_slots[slot].astype(jnp.float32)    # [chunk, n]
-        C = c_slots[slot].astype(jnp.float32)    # [chunk, n]
-
-        dA = dt * A                             # [chunk, nh] (<=0)
-        cs = jnp.cumsum(dA, axis=0)
-        total = cs[-1]                          # [nh]
-        dtx = x * dt[..., None]                 # [chunk, nh, p]
-        scores = C @ B.T                        # [chunk, chunk]
-
-        ys = []
-        h_next = []
-        for h in range(nh):
-            seg = cs[:, None, h] - cs[None, :, h]
-            L = jnp.exp(seg) * causal
-            y_intra = (scores * L) @ dtx[:, h]
-            h_prev = h_s[h]                                    # [p, n]
-            y_inter = jnp.exp(cs[:, h])[:, None] * (C @ h_prev.T)
-            ys.append(y_intra + y_inter)
-            decay_to_end = jnp.exp(total[h] - cs[:, h])
-            s_chunk = (B * decay_to_end[:, None]).T @ dtx[:, h]  # [n, p]
-            h_next.append(h_prev * jnp.exp(total[h]) + s_chunk.T)
-
-        y_ref[0, pl.ds(tile * chunk, chunk)] = jnp.stack(
-            ys, axis=1).astype(y_ref.dtype)
-        for h in range(nh):
-            h_s[h] = h_next[h]
-        return carry
-
-    coro_loop(n_chunks, depth, issue, consume, wait)
-
-    hout_ref[...] = h_s[...].astype(hout_ref.dtype)[None]
+    return CoroSpec(
+        name="ssd_scan",
+        loads=(
+            LoadStream("x", (chunk, nh, p), dtype, src=chunk_src("x_hbm")),
+            LoadStream("dt", (chunk, nh), dtype, src=chunk_src("dt_hbm")),
+            LoadStream("bmat", (chunk, n), dtype, src=chunk_src("b_hbm")),
+            LoadStream("cmat", (chunk, n), dtype, src=chunk_src("c_hbm")),
+        ),
+        vars=(
+            # recurrent state: order-dependent update -> SEQUENTIAL, one copy
+            ctx_mod.var("h", (nh, p, n), jnp.float32,
+                        carries_dependence=True),
+            # per-batch residents: h-out f32 block + y output block
+            ctx_mod.VarSpec("h_out_block", nbytes=4 * nh * p * n,
+                            hint=ctx_mod.VarClass.SHARED),
+            ctx_mod.VarSpec("y_block",
+                            nbytes=(seq_len or chunk) * nh * p * itemsize,
+                            hint=ctx_mod.VarClass.SHARED),
+        ),
+        flops_per_tile=float(2 * chunk * chunk * (n + nh * p)),
+    )
 
 
 def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
@@ -93,17 +67,54 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
     n = B.shape[-1]
     assert s % chunk == 0
     n_chunks = s // chunk
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_ssd(chunk, nh, p, n, x.dtype.itemsize,
-                                 seq_len=s),
-            kernel="ssd_scan")
-    depth = min(depth, n_chunks)
+    spec = ssd_spec(chunk, nh, p, n, x.dtype, seq_len=s)
 
-    kernel = functools.partial(_ssd_kernel, depth=depth, chunk=chunk, nh=nh,
-                               p=p, n=n, n_chunks=n_chunks)
-    out = pl.pallas_call(
-        kernel,
+    def prologue(ctx):
+        ctx.h[...] = jnp.zeros_like(ctx.h)  # fresh state per batch element
+        A_f = ctx.a[...].astype(jnp.float32)          # [nh]
+        causal = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+        return (A_f, causal)
+
+    def body(ctx, tile, slot, carry):
+        A_f, causal = carry
+        xc = ctx.x[slot].astype(jnp.float32)     # [chunk, nh, p]
+        dtc = ctx.dt[slot].astype(jnp.float32)   # [chunk, nh]
+        Bc = ctx.bmat[slot].astype(jnp.float32)  # [chunk, n]
+        Cc = ctx.cmat[slot].astype(jnp.float32)  # [chunk, n]
+
+        dA = dtc * A_f                          # [chunk, nh] (<=0)
+        cs = jnp.cumsum(dA, axis=0)
+        total = cs[-1]                          # [nh]
+        dtx = xc * dtc[..., None]               # [chunk, nh, p]
+        scores = Cc @ Bc.T                      # [chunk, chunk]
+
+        ys = []
+        h_next = []
+        for hh in range(nh):
+            seg = cs[:, None, hh] - cs[None, :, hh]
+            L = jnp.exp(seg) * causal
+            y_intra = (scores * L) @ dtx[:, hh]
+            h_prev = ctx.h[hh]                                   # [p, n]
+            y_inter = jnp.exp(cs[:, hh])[:, None] * (Cc @ h_prev.T)
+            ys.append(y_intra + y_inter)
+            decay_to_end = jnp.exp(total[hh] - cs[:, hh])
+            s_chunk = (Bc * decay_to_end[:, None]).T @ dtx[:, hh]  # [n, p]
+            h_next.append(h_prev * jnp.exp(total[hh]) + s_chunk.T)
+
+        ctx.y[0, pl.ds(tile * chunk, chunk)] = jnp.stack(
+            ys, axis=1).astype(ctx.y.dtype)
+        for hh in range(nh):
+            ctx.h[hh] = h_next[hh]
+        return carry
+
+    def epilogue(ctx, carry):
+        ctx.h_out[...] = ctx.h[...].astype(ctx.h_out.dtype)[None]
+
+    out = coro_call(
+        spec, x, dt, A, B, C,
+        n_tiles=n_chunks, depth=depth, body=body,
+        prologue=prologue, epilogue=epilogue,
+        arg_names=("x_hbm", "dt_hbm", "a", "b_hbm", "c_hbm", "y", "h_out"),
         grid=(bsz,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),            # x
@@ -120,14 +131,6 @@ def ssd_scan(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
             jax.ShapeDtypeStruct((bsz, s, nh, p), x.dtype),
             jax.ShapeDtypeStruct((bsz, nh, p, n), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((depth, chunk, nh, p), x.dtype),
-            pltpu.VMEM((depth, chunk, nh), dt.dtype),
-            pltpu.VMEM((depth, chunk, n), B.dtype),
-            pltpu.VMEM((depth, chunk, n), C.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-            pltpu.VMEM((nh, p, n), jnp.float32),
-        ],
         interpret=interpret,
-    )(x, dt, A, B, C)
+    )
     return out[0], out[1]

@@ -1,8 +1,9 @@
 """Public STREAM-triad op.
 
-``depth=None`` solves the pipeline depth from the triad tile's
-`TileProfile` via core.autotune (= `schedule.solve_depth` until transfer
-samples are recorded).
+``depth=None`` solves the pipeline depth from the declared `CoroSpec`
+(`stream_copy.triad_spec`) via core.autotune. The store side rides the
+substrate's shared `StoreStream` drain path (the same code as
+coro_scatter_add's RMW pipeline).
 """
 from __future__ import annotations
 

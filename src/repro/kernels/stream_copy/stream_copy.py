@@ -1,64 +1,40 @@
-"""STREAM triad with an explicit decoupled load/store pipeline.
+"""STREAM triad declared as a `CoroSpec`: decoupled load + store pipeline.
 
-The bandwidth-bound end of the paper's benchmark suite (Table II). Unlike the
-gather kernels, every request is a maximal coarse-grained span (the paper's
-§III-C case 1 — unit-stride loops coalesce perfectly), so the pipeline
-measures pure issue/consume overlap: tiles of b and c stream in as one aset
-group of two span DMAs per slot while a-tiles stream back out. The rotation
-is `core.coro.coro_loop` in grid mode; the store pipeline (drain previous
-store, compute, start new store) lives in the consume callback.
+The bandwidth-bound end of the paper's benchmark suite (Table II). Unlike
+the gather kernels, every request is a maximal coarse-grained span (the
+paper's §III-C case 1 — unit-stride loops coalesce perfectly), so the
+pipeline measures pure issue/consume overlap: tiles of b and c stream in as
+two span `LoadStream`s per slot while a-tiles stream back out through a
+`StoreStream`. The drain-previous-store / epilogue-drain plumbing is the
+substrate's shared store path (`core.coro.coro_pipeline`) — the same code
+coro_scatter_add rides — leaving the kernel a three-stream declaration and
+a one-line body.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import autotune
-from repro.core.coro import coro_loop
+from repro.core.coro import CoroSpec, LoadStream, StoreStream, coro_call
 
 
-def _triad_kernel(s_ref, b_ref, c_ref, a_ref, b_slots, c_slots, a_slots,
-                  load_sems, store_sems, *, depth: int, rows: int, n_tiles: int):
-    i = pl.program_id(0)
-
-    def issue(tile, slot):
-        start = tile * rows
-        pltpu.make_async_copy(b_ref.at[pl.ds(start, rows)], b_slots.at[slot],
-                              load_sems.at[slot]).start()
-        pltpu.make_async_copy(c_ref.at[pl.ds(start, rows)], c_slots.at[slot],
-                              load_sems.at[slot]).start()
-
-    def wait_loads(tile, slot):
-        pltpu.make_async_copy(b_slots.at[slot], b_slots.at[slot],
-                              load_sems.at[slot]).wait()
-        pltpu.make_async_copy(c_slots.at[slot], c_slots.at[slot],
-                              load_sems.at[slot]).wait()
-
-    def wait_store(slot):
-        pltpu.make_async_copy(a_slots.at[slot], a_slots.at[slot],
-                              store_sems.at[slot]).wait()
-
-    def consume(tile, slot, carry):
-        @pl.when(tile >= depth)
-        def _():
-            wait_store(slot)
-
-        a_slots[slot] = b_slots[slot] + s_ref[0] * c_slots[slot]
-        pltpu.make_async_copy(a_slots.at[slot],
-                              a_ref.at[pl.ds(tile * rows, rows)],
-                              store_sems.at[slot]).start()
-        return carry
-
-    coro_loop(n_tiles, depth, issue, consume, wait_loads, grid_step=i)
-
-    @pl.when(i == n_tiles - 1)
-    def _():
-        for s in range(min(depth, n_tiles)):
-            wait_store(s)
+def triad_spec(rows: int, d: int, dtype) -> CoroSpec:
+    """STREAM tile: two span loads plus one span store per slot."""
+    return CoroSpec(
+        name="stream_triad",
+        loads=(
+            LoadStream("bs", (rows, d), dtype,
+                       src=lambda ctx, t: ctx.b.at[pl.ds(t * rows, rows)]),
+            LoadStream("cs", (rows, d), dtype,
+                       src=lambda ctx, t: ctx.c.at[pl.ds(t * rows, rows)]),
+        ),
+        stores=(
+            StoreStream("as_", (rows, d), dtype,
+                        dst=lambda ctx, t: ctx.a.at[pl.ds(t * rows, rows)]),
+        ),
+        flops_per_tile=float(2 * rows * d),  # fma per element
+    )
 
 
 def triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
@@ -67,30 +43,21 @@ def triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
     n, d = b.shape
     assert n % rows == 0
     n_tiles = n // rows
-    if depth is None:
-        depth = autotune.choose_depth(
-            autotune.profile_triad(rows, d, b.dtype.itemsize),
-            kernel="stream_triad")
-    depth = min(depth, n_tiles)
-    kernel = functools.partial(_triad_kernel, depth=depth, rows=rows,
-                               n_tiles=n_tiles)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    spec = triad_spec(rows, d, b.dtype)
+
+    def body(ctx, t, slot, carry):
+        ctx.as_[slot] = ctx.bs[slot] + ctx.s[0] * ctx.cs[slot]
+        return carry
+
+    return coro_call(
+        spec, jnp.asarray([scalar], b.dtype), b, c,
+        n_tiles=n_tiles, depth=depth, body=body,
+        arg_names=("s", "b", "c", "a"),
+        grid=(n_tiles,), drive_axis=0,
         num_scalar_prefetch=1,   # scalar in SMEM
-        grid=(n_tiles,),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=[
-            pltpu.VMEM((depth, rows, d), b.dtype),
-            pltpu.VMEM((depth, rows, d), b.dtype),
-            pltpu.VMEM((depth, rows, d), b.dtype),
-            pltpu.SemaphoreType.DMA((depth,)),
-            pltpu.SemaphoreType.DMA((depth,)),
-        ],
-    )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, d), b.dtype),
         interpret=interpret,
-    )(jnp.asarray([scalar], b.dtype), b, c)
+    )

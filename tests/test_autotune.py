@@ -1,10 +1,11 @@
 """Autotuned pipeline depth: solver properties + kernel entry-point wiring.
 
-Covers the ISSUE-1 acceptance criteria:
+Covers the ISSUE-1/ISSUE-2 acceptance criteria:
   * the solved depth hides the modelled latency (hiding condition);
   * the VMEM budget caps it, with a floor of 2;
   * every kernel family's ``depth=None`` path chooses exactly
-    `schedule.solve_depth` of that kernel's `TileProfile`;
+    `autotune.choose_depth` of that family's declared `CoroSpec`
+    (profile + classified context vars);
   * gather/scatter outputs with autotuned depth match the references
     bit-exactly;
   * the run-time feedback path (`record_transfer` -> `adaptive_depth`)
@@ -23,14 +24,28 @@ from repro.core.schedule import (
     tile_compute_s,
     tile_transfer_s,
 )
+from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
 from repro.kernels.coro_gather.ref import gather_ref
+from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_spec
 from repro.kernels.coro_scatter_add.ops import coro_scatter_add
 from repro.kernels.coro_scatter_add.ref import scatter_add_ref
+from repro.kernels.decode_attention.decode_attention import decode_spec
 from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.moe_gmm.moe_gmm import gmm_spec
 from repro.kernels.moe_gmm.ops import moe_gmm
 from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ssd_scan import ssd_spec
 from repro.kernels.stream_copy.ops import stream_triad
+from repro.kernels.stream_copy.stream_copy import triad_spec
+
+
+def _spec_depth(spec, n_tiles):
+    """The depth a ``depth=None`` entry point should have recorded: the
+    solver's answer clamped to the call's tile count (`last_choice` reports
+    the depth actually run, never an unallocatable one)."""
+    return min(autotune.choose_depth(spec.profile(), vars=spec.all_vars()),
+               n_tiles)
 
 
 @pytest.fixture(autouse=True)
@@ -82,45 +97,45 @@ def test_depth_floor_is_two():
 # ---------------------------------------- entry points choose solve_depth
 
 
-def test_every_kernel_entry_point_solves_its_profile(rng):
-    """depth=None == schedule.solve_depth(TileProfile) for all five families
-    (+ stream_copy)."""
-    f32 = 4
+def test_every_kernel_entry_point_solves_its_spec(rng):
+    """depth=None == choose_depth(spec.profile(), vars=spec.all_vars()) for
+    all six families — the entry points consume the declared CoroSpec."""
+    f32 = jnp.float32
 
     table = jnp.asarray(rng.randn(128, 64), jnp.float32)
     coro_gather(table, jnp.asarray(rng.randint(0, 128, 48), jnp.int32))
-    assert autotune.last_choice("row_gather") == solve_depth(
-        autotune.profile_row_gather(8, 64, f32))
+    assert autotune.last_choice("row_gather") == _spec_depth(
+        row_gather_spec(8, 64, f32), n_tiles=48 // 8)
 
     coro_scatter_add(table, np.arange(16, dtype=np.int32),
                      jnp.asarray(rng.randn(16, 64), jnp.float32))
-    assert autotune.last_choice("scatter_add") == solve_depth(
-        autotune.profile_scatter_add(8, 64, f32))
+    assert autotune.last_choice("scatter_add") == _spec_depth(
+        scatter_add_spec(8, 64, f32), n_tiles=16 // 8)
 
     q = jnp.asarray(rng.randn(1, 4, 16), jnp.float32)
     kv = jnp.asarray(rng.randn(1, 128, 2, 16), jnp.float32)
     decode_attention(q, kv, kv, 100, blk=32)
-    assert autotune.last_choice("flash_decode") == solve_depth(
-        autotune.profile_decode(32, 2, 2, 16, f32))
+    assert autotune.last_choice("flash_decode") == _spec_depth(
+        decode_spec(32, 2, 2, 16, f32), n_tiles=128 // 32)
 
     t = jnp.asarray(rng.randn(2, 8, 16), jnp.float32)
     w = jnp.asarray(rng.randn(2, 16, 256), jnp.float32)
     moe_gmm(t, w, f_tile=128)
-    assert autotune.last_choice("moe_gmm") == solve_depth(
-        autotune.profile_gmm(8, 16, 128, f32, f_total=256))
+    assert autotune.last_choice("moe_gmm") == _spec_depth(
+        gmm_spec(8, 16, 128, f32, f_total=256), n_tiles=256 // 128)
 
     x = jnp.asarray(rng.randn(1, 64, 2, 8), jnp.float32)
     dt = jnp.asarray(rng.rand(1, 64, 2) * 0.5 + 0.1, jnp.float32)
     A = jnp.asarray(-np.exp(rng.randn(2) * 0.3), jnp.float32)
     B = jnp.asarray(rng.randn(1, 64, 16), jnp.float32)
     ssd(x, dt, A, B, B, chunk=16)
-    assert autotune.last_choice("ssd_scan") == solve_depth(
-        autotune.profile_ssd(16, 2, 8, 16, f32, seq_len=64))
+    assert autotune.last_choice("ssd_scan") == _spec_depth(
+        ssd_spec(16, 2, 8, 16, f32, seq_len=64), n_tiles=64 // 16)
 
     b = jnp.asarray(rng.randn(256, 32), jnp.float32)
     stream_triad(b, b, 2.0, rows=64)
-    assert autotune.last_choice("stream_triad") == solve_depth(
-        autotune.profile_triad(64, 32, f32))
+    assert autotune.last_choice("stream_triad") == _spec_depth(
+        triad_spec(64, 32, f32), n_tiles=256 // 64)
 
 
 def test_gather_autotuned_depth_matches_ref_bit_exact(rng):
