@@ -26,7 +26,14 @@ from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
 from repro.kernels.coro_gather.ref import gather_ref
 from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_spec
-from repro.kernels.decode_attention.decode_attention import decode_spec
+from repro.kernels.decode_attention.decode_attention import (
+    decode_spec,
+    paged_decode_spec,
+)
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    paged_decode_attention,
+)
 from repro.kernels.moe_gmm.moe_gmm import gmm_spec
 from repro.kernels.ssd_scan.ssd_scan import ssd_spec
 from repro.kernels.stream_copy.ops import stream_triad
@@ -133,6 +140,47 @@ def context_rows():
     return out
 
 
+def paged_decode_rows():
+    """Paged vs dense decode kernel at EQUAL total KV.
+
+    The same [B, S] worth of KV is served once as dense per-request caches
+    and once as a shuffled block pool addressed through block tables. The
+    row reports the paged spec's classified context bytes, the depth the
+    autotuner solves for it, and interpret-mode tokens/s for both kernels
+    (relative, not TPU numbers — see module docstring).
+    """
+    rng = np.random.RandomState(4)
+    out = []
+    for bsz, s, kh, h, d, blk in ((2, 256, 2, 8, 16, 64),):
+        q = jnp.asarray(rng.randn(bsz, h, d), jnp.float32)
+        k = jnp.asarray(rng.randn(bsz, s, kh, d), jnp.float32)
+        v = jnp.asarray(rng.randn(bsz, s, kh, d), jnp.float32)
+        # carve the same KV into a block pool with shuffled page placement
+        m = s // blk
+        nb = bsz * m + 1  # + garbage page 0
+        ids = rng.permutation(np.arange(1, nb)).reshape(bsz, m)
+        kp = jnp.zeros((nb, blk, kh, d), jnp.float32)
+        vp = jnp.zeros((nb, blk, kh, d), jnp.float32)
+        kp = kp.at[ids.reshape(-1)].set(k.reshape(bsz * m, blk, kh, d))
+        vp = vp.at[ids.reshape(-1)].set(v.reshape(bsz * m, blk, kh, d))
+        bt = jnp.asarray(ids, jnp.int32)
+        lens = jnp.full((bsz,), s, jnp.int32)
+
+        _, us_dense = timed(decode_attention, q, k, v, s - 1, blk=blk, repeats=1)
+        res, us_paged = timed(paged_decode_attention, q, kp, vp, bt, lens,
+                              repeats=1)
+        ref = decode_attention(q, k, v, s - 1, blk=blk)
+        assert bool(jnp.allclose(res, ref, rtol=2e-5, atol=2e-5))
+        g = h // kh
+        spec = paged_decode_spec(blk, kh, g, d, jnp.float32, m)
+        depth = autotune.last_choice("paged_decode")
+        out.append(["paged_decode", f"{bsz}x{s}x{kh}x{d}/blk{blk}",
+                    spec.context_bytes(depth), depth,
+                    round(bsz / (us_paged * 1e-6), 1),
+                    round(bsz / (us_dense * 1e-6), 1)])
+    return out
+
+
 def triad_rows():
     rng = np.random.RandomState(2)
     b = jnp.asarray(rng.randn(1024, 64), jnp.float32)
@@ -155,6 +203,8 @@ def table() -> str:
                    adaptive_rows())
     s += csv_table(["spec", "depth", "ctx_bytes", "ctx_baseline", "ratio"],
                    context_rows())
+    s += csv_table(["pass", "shape", "ctx_bytes", "depth", "tok_per_s",
+                    "dense_tok_per_s"], paged_decode_rows())
     return s
 
 

@@ -24,6 +24,9 @@ fi
 echo "== fast lane: python -m pytest -q -m 'not slow' =="
 python -m pytest -q -m "not slow"
 
+echo "== paged-serving smoke: examples/serve_batched.py --engine paged =="
+python examples/serve_batched.py --engine paged
+
 if [[ "${1:-}" == "fast" ]]; then
     exit 0
 fi

@@ -114,3 +114,114 @@ def flash_decode(q, k_cache, v_cache, pos, *, blk: int = 128,
         out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
         interpret=interpret,
     )
+
+
+# ----------------------------------------------------------- paged variant
+
+
+def paged_decode_spec(blk: int, kh: int, g: int, d: int, dtype,
+                      max_blocks: int) -> CoroSpec:
+    """One KV *page* = one coroutine tile, fetched through the block table.
+
+    The serving engine's pager scatters each request's cache across a shared
+    HBM block pool; the LoadStream src is gather-indexed — the tile's DMA
+    source is `pool[block_tables[b, i]]`, a data-dependent page id read from
+    scalar-prefetch memory (the paper's indirectly addressed aload). Context
+    is identical to the dense `decode_spec`: slots are private, the
+    online-softmax accumulators are commutative -> SHARED, so every request
+    in a round rides one pipeline at one solved depth.
+    """
+    h = kh * g
+
+    def kv_src(ref_name):
+        def src(ctx, i):
+            ref = getattr(ctx, ref_name)
+            bid = ctx.bt[ctx.pids[0] * max_blocks + i]
+            return ref.at[pl.ds(bid, 1)]
+        return src
+
+    return CoroSpec(
+        name="paged_decode",
+        loads=(
+            LoadStream("k", (1, blk, kh, d), dtype, src=kv_src("k_pool")),
+            LoadStream("v", (1, blk, kh, d), dtype, src=kv_src("v_pool")),
+        ),
+        vars=(
+            ctx_mod.var("m", (kh, g), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            ctx_mod.var("l", (kh, g), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            ctx_mod.var("acc", (kh, g, d), jnp.float32,
+                        carries_dependence=True, commutative=True),
+            ctx_mod.VarSpec("q_f32", nbytes=4 * (h * d + kh * g * d),
+                            read_only=True),
+        ),
+        flops_per_tile=float(4 * blk * h * d),
+    )
+
+
+def paged_flash_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                       depth: int | None = None, interpret: bool = True):
+    """Flash-decode over a paged KV pool with ragged per-request lengths.
+
+    q: [B,H,D]; k_pool/v_pool: [NB, blk, KH, D]; block_tables: [B, M] int32
+    (pad with the reserved garbage block 0); lengths: [B] int32 — request b
+    attends key positions < lengths[b]. Returns [B,H,D]; rows with
+    lengths == 0 are garbage (round padding slots).
+
+    Every request walks the same M tiles (tail pages fully masked), so one
+    `coro_call` at one solved depth serves the whole ragged round — the
+    block table only redirects each tile's DMA source.
+    """
+    bsz, h, d = q.shape
+    blk, kh = k_pool.shape[1], k_pool.shape[2]
+    max_blocks = block_tables.shape[1]
+    g = h // kh
+    spec = paged_decode_spec(blk, kh, g, d, k_pool.dtype, max_blocks)
+
+    def prologue(ctx):
+        ctx.m[...] = jnp.full_like(ctx.m, NEG_INF)
+        ctx.l[...] = jnp.zeros_like(ctx.l)
+        ctx.acc[...] = jnp.zeros_like(ctx.acc)
+        qv = ctx.q_in[0].reshape(kh, g, d).astype(jnp.float32) * (d ** -0.5)
+        return (qv, ctx.lens[ctx.pids[0]])
+
+    def body(ctx, i, slot, carry):
+        qv, len_v = carry
+        k = ctx.k[slot, 0].astype(jnp.float32)   # [blk, kh, d]
+        v = ctx.v[slot, 0].astype(jnp.float32)
+        sc = jnp.einsum("kgd,bkd->kgb", qv, k)    # [kh, g, blk]
+        kpos = i * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
+        sc = jnp.where(kpos < len_v, sc, NEG_INF)
+        m_new = jnp.maximum(ctx.m[...], sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(ctx.m[...] - m_new)
+        ctx.l[...] = ctx.l[...] * corr + p.sum(axis=-1)
+        ctx.acc[...] = (ctx.acc[...] * corr[..., None]
+                        + jnp.einsum("kgb,bkd->kgd", p, v))
+        ctx.m[...] = m_new
+        return carry
+
+    def epilogue(ctx, carry):
+        out = ctx.acc[...] / jnp.maximum(ctx.l[...], 1e-30)[..., None]
+        ctx.o[...] = out.reshape(1, kh * g, d).astype(ctx.o.dtype)
+
+    return coro_call(
+        spec,
+        jnp.asarray(block_tables, jnp.int32).reshape(-1),
+        jnp.asarray(lengths, jnp.int32),
+        q, k_pool, v_pool,
+        n_tiles=max_blocks, depth=depth, body=body,
+        prologue=prologue, epilogue=epilogue,
+        arg_names=("bt", "lens", "q_in", "k_pool", "v_pool", "o"),
+        grid=(bsz,),
+        num_scalar_prefetch=2,
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda b, bt_ref, lens_ref: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda b, bt_ref, lens_ref: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, d), q.dtype),
+        interpret=interpret,
+    )

@@ -21,3 +21,21 @@ def decode_attention_ref(q, k_cache, v_cache, pos):
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Oracle for the paged kernel: gather each request's pages back into a
+    dense cache, then run the dense oracle at that request's own position.
+
+    q: [B,H,D]; pools: [NB, blk, KH, D]; block_tables: [B,M]; lengths: [B]
+    (attend to positions < lengths[b]). Returns [B,H,D].
+    """
+    b = q.shape[0]
+    blk, kh, d = k_pool.shape[1], k_pool.shape[2], k_pool.shape[3]
+    m = block_tables.shape[1]
+    outs = []
+    for r in range(b):
+        k = k_pool[block_tables[r]].reshape(1, m * blk, kh, d)
+        v = v_pool[block_tables[r]].reshape(1, m * blk, kh, d)
+        outs.append(decode_attention_ref(q[r:r + 1], k, v, int(lengths[r]) - 1))
+    return jnp.concatenate(outs, axis=0)

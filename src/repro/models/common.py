@@ -309,3 +309,49 @@ def decode_attention(ctx: ShardingCtx, q, k_cache, v_cache, new_k, new_v, pos,
         return _single_decode(q, k_cache, v_cache, new_k, new_v, pos, update)
     return flash_decode_attention(ctx, q, k_cache, v_cache, new_k, new_v, pos,
                                   update, update_mode)
+
+
+# --------------------------------------------------------- paged KV (serving)
+
+
+def paged_cache_append(k_pool, v_pool, block_tables, lengths, new_k, new_v):
+    """Write one new KV row per request into its paged block.
+
+    k_pool/v_pool: [NB, blk, KH, D] one layer's block pool; block_tables:
+    [B, M] int32 block ids; lengths: [B] int32 tokens already stored — row b
+    lands in block `block_tables[b, lengths[b] // blk]` at offset
+    `lengths[b] % blk`. new_k/new_v: [B, 1, KH, D]. Requests own disjoint
+    blocks (serve.kv_pager invariant) so the scatter indices never collide,
+    except padding rows which all target the reserved garbage block 0.
+    """
+    b = lengths.shape[0]
+    blk = k_pool.shape[1]
+    bids = block_tables[jnp.arange(b), lengths // blk]
+    offs = lengths % blk
+    k_pool = k_pool.at[bids, offs].set(new_k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(new_v[:, 0].astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
+    """Decode attention over a paged KV cache (jnp twin of the Pallas
+    `kernels/decode_attention.paged_flash_decode`).
+
+    q: [B, 1, H, D]; k_pool/v_pool: [NB, blk, KH, D]; block_tables: [B, M]
+    int32 (padded with the garbage block 0); lengths: [B] int32 — request b
+    attends key positions < lengths[b]. Returns [B, 1, H, D]. Rows with
+    lengths == 0 (padding slots in a round) produce garbage the caller
+    discards.
+    """
+    b, _, h, d = q.shape
+    blk, kh = k_pool.shape[1], k_pool.shape[2]
+    m = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(b, m * blk, kh, d)
+    v = v_pool[block_tables].reshape(b, m * blk, kh, d)
+    qg = _group(q, kh)[:, 0] * (d ** -0.5)  # [B,KH,G,D]
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k, preferred_element_type=jnp.float32)
+    valid = jnp.arange(m * blk)[None, None, None, :] < lengths[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v)
+    return o.reshape(b, 1, h, d)

@@ -26,6 +26,8 @@ from repro.models.common import (
     attention,
     decode_attention,
     embed_lookup,
+    paged_cache_append,
+    paged_decode_attention,
     rms_norm,
     sinusoid_pos_emb,
     swiglu,
@@ -338,6 +340,106 @@ def block_decode(p, x, layer_cache, cfg: ArchConfig, ctx: ShardingCtx, *, pos):
         x = x + swiglu(h, m["w_gate"].astype(h.dtype), m["w_up"].astype(h.dtype),
                        m["w_down"].astype(h.dtype))
     return x, new_cache
+
+
+# ------------------------------------------------------------ paged decode
+#
+# The serving engine (repro.serve) replaces the dense [B, max_len] KV caches
+# with per-layer block pools: requests own disjoint fixed-size pages, a block
+# table maps each request's logical positions onto pool blocks, and every
+# request in a round decodes at its OWN position (ragged lengths — the dense
+# path's single scalar `pos` becomes a [B] vector). Supported families:
+# attention (+ MoE FFN); SSM/hybrid recurrent state, cross-attention, and
+# ring (sliding-window) caches keep the dense path.
+
+
+def paged_attn_decode(p, x, k_pool, v_pool, cfg: ArchConfig, *, block_tables,
+                      lengths):
+    """One-token attention against one layer's paged KV pool.
+
+    x: [B, 1, d]; k_pool/v_pool: [NB, blk, KH, D]; lengths: [B] int32 tokens
+    already stored per request (the new KV row is written at that position).
+    Returns (attn_out, k_pool, v_pool).
+    """
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg)
+    posv = lengths[:, None]  # [B, 1] per-request decode position
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    k_pool, v_pool = paged_cache_append(k_pool, v_pool, block_tables, lengths, k, v)
+    o = paged_decode_attention(q, k_pool, v_pool, block_tables, lengths + 1)
+    return _attn_out(p, o, cfg), k_pool, v_pool
+
+
+def paged_block_decode(p, x, k_pool, v_pool, cfg: ArchConfig, ctx: ShardingCtx,
+                       *, block_tables, lengths):
+    """One layer, one token per request, paged KV. Returns (x, k_pool, v_pool)."""
+    attn_o, k_pool, v_pool = paged_attn_decode(
+        p["attn"], x, k_pool, v_pool, cfg,
+        block_tables=block_tables, lengths=lengths)
+    x = x + attn_o
+    if cfg.moe:
+        h = rms_norm(x, p["moe_ln"], cfg.norm_eps)
+        moe_o, _ = moe_layer(p["moe"], h, cfg, ctx)
+        x = x + moe_o
+    elif "mlp" in p:
+        m = p["mlp"]
+        h = rms_norm(x, m["ln"], cfg.norm_eps)
+        x = x + swiglu(h, m["w_gate"].astype(h.dtype), m["w_up"].astype(h.dtype),
+                       m["w_down"].astype(h.dtype))
+    return x, k_pool, v_pool
+
+
+def run_layers_decode_paged(layers, k_pools, v_pools, x, cfg: ArchConfig,
+                            ctx: ShardingCtx, *, block_tables, lengths):
+    """All layers over per-layer pools [L, NB, blk, KH, D]. Returns
+    (x, k_pools, v_pools)."""
+
+    def body(x, inp):
+        lp, kp, vp = inp
+        y, kp, vp = paged_block_decode(lp, x, kp, vp, cfg, ctx,
+                                       block_tables=block_tables, lengths=lengths)
+        return y, (kp, vp)
+
+    if cfg.scan_layers:
+        x, (k_pools, v_pools) = jax.lax.scan(body, x, (layers, k_pools, v_pools))
+        return x, k_pools, v_pools
+
+    n = jax.tree.leaves(layers)[0].shape[0]
+    kps, vps = [], []
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], layers)
+        x, (kp, vp) = body(x, (lp, k_pools[i], v_pools[i]))
+        kps.append(kp)
+        vps.append(vp)
+    return x, jnp.stack(kps), jnp.stack(vps)
+
+
+def supports_paged_decode(cfg: ArchConfig) -> bool:
+    """Families the paged serving engine can drive (attention KV only)."""
+    return (cfg.has_attention and not cfg.hybrid and not cfg.enc_dec
+            and not cfg.vlm and not cfg.sliding_window)
+
+
+def decode_step_paged(params, k_pools, v_pools, block_tables, lengths, batch,
+                      cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX):
+    """One decode step for a round of ragged requests over paged KV pools.
+
+    batch["tokens"]: [B, 1]; lengths: [B] int32 — each request's stored token
+    count (its new KV row is written there, then it attends to lengths+1
+    positions). Returns (logits [B, 1, V], k_pools, v_pools).
+    """
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"paged decode unsupported for family {cfg.family!r} "
+                         f"(sliding_window={cfg.sliding_window})")
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], batch["tokens"]).astype(dt)
+    x, k_pools, v_pools = run_layers_decode_paged(
+        params["layers"], k_pools, v_pools, x, cfg, ctx,
+        block_tables=block_tables, lengths=lengths)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg, ctx)
+    return logits, k_pools, v_pools
 
 
 # --------------------------------------------------------------- layer stack

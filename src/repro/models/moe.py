@@ -50,7 +50,30 @@ def router_topk(x, w_router, top_k: int):
     return gates.astype(x.dtype), experts.astype(jnp.int32), aux
 
 
-def _expert_ffn(xs, wg, wu, wd):
+GMM_F_TILE = 128
+
+
+def _gmm_eligible(xs, wg, wu, wd) -> bool:
+    """The streamed-weight kernel wants matched [E, ...] batching and tile-
+    divisible output widths (dff and d_model for the down projection)."""
+    return (xs.ndim == 3 and xs.shape[0] == wg.shape[0]
+            and wg.shape[-1] % GMM_F_TILE == 0
+            and wd.shape[-1] % GMM_F_TILE == 0)
+
+
+def _expert_ffn(xs, wg, wu, wd, *, use_gmm: bool | None = None):
+    """Per-expert SwiGLU. On TPU (when shapes allow) each grouped matmul is
+    the `kernels/moe_gmm` coroutine pipeline — expert weights are the far-
+    memory objects, streamed HBM->VMEM tile-by-tile while the MXU consumes
+    the previous tile. The dense einsum below is the jnp twin, kept as the
+    interpret-mode / CPU fallback (ROADMAP: MoE expert-parallel dispatch)."""
+    if use_gmm is None:
+        use_gmm = jax.default_backend() == "tpu"
+    if use_gmm and _gmm_eligible(xs, wg, wu, wd):
+        from repro.kernels.moe_gmm.ops import moe_gmm
+        h = jax.nn.silu(moe_gmm(xs, wg.astype(xs.dtype), f_tile=GMM_F_TILE))
+        h = h * moe_gmm(xs, wu.astype(xs.dtype), f_tile=GMM_F_TILE)
+        return moe_gmm(h, wd.astype(xs.dtype), f_tile=GMM_F_TILE)
     h = jax.nn.silu(jnp.einsum("...td,...df->...tf", xs, wg.astype(xs.dtype)))
     h = h * jnp.einsum("...td,...df->...tf", xs, wu.astype(xs.dtype))
     return jnp.einsum("...tf,...fd->...td", h, wd.astype(xs.dtype))

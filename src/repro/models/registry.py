@@ -47,6 +47,13 @@ class Model:
     def decode_step(self, params, cache, batch):
         return lm.decode_step(params, cache, batch, self.cfg, self.ctx)
 
+    def decode_step_paged(self, params, k_pools, v_pools, block_tables, lengths, batch):
+        return lm.decode_step_paged(params, k_pools, v_pools, block_tables,
+                                    lengths, batch, self.cfg, self.ctx)
+
+    def supports_paged_decode(self) -> bool:
+        return lm.supports_paged_decode(self.cfg)
+
     # -------------------------------------------------------------- cache
     def cache_specs(self, shape: ShapeSuite):
         return lm.cache_specs(self.cfg, shape)

@@ -1,0 +1,24 @@
+"""Paged-KV continuous-batching serving on the coroutine substrate.
+
+  kv_pager    - HBM block pool + per-request block tables (host bookkeeping)
+  scheduler   - admit/evict/preempt; rounds bounded by the autotuned depth
+  engine      - prefill-then-decode loop with streaming completions
+"""
+from repro.serve.engine import PagedServingEngine, percentile_ms
+from repro.serve.kv_pager import GARBAGE_BLOCK, KVPager, PoolExhausted
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestState,
+)
+
+__all__ = [
+    "ContinuousBatchingScheduler",
+    "GARBAGE_BLOCK",
+    "KVPager",
+    "PagedServingEngine",
+    "PoolExhausted",
+    "Request",
+    "RequestState",
+    "percentile_ms",
+]

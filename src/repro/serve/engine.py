@@ -1,0 +1,282 @@
+"""Paged-KV continuous-batching serving engine on the coroutine substrate.
+
+Drives prefill-then-decode over the block pool: every round the scheduler
+admits what fits, each admitted request is prefilled (its prompt KV is
+scattered into its pages), and all running requests decode one token
+through a single jitted `models.lm.decode_step_paged` — per-request ragged
+positions, one fixed round width, pools donated so the cache updates in
+place. The round width is the pipeline depth `core.autotune` solves for the
+paged decode `CoroSpec`: the scheduler keeps as many request-coroutines in
+flight as the tuned pipeline keeps page-tiles in flight.
+
+The decode math runs through the jnp twin (`models.common`), which jits on
+any backend; `kernels/decode_attention.paged_flash_decode` is the TPU
+pipeline the round rides there (validated for parity in
+tests/test_serve_paged.py, benchmarked in benchmarks/kernel_bench.py).
+
+Because freed pages are reused immediately, the aggregate KV served over a
+workload routinely exceeds what the same HBM held as a dense
+``[batch, max_len]`` cache — `stats()["kv_oversubscription"]` reports the
+ratio.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import autotune
+from repro.kernels.decode_attention.decode_attention import paged_decode_spec
+from repro.models import build_model
+from repro.serve.kv_pager import KVPager
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestState,
+)
+from repro.sharding import NULL_CTX, ShardingCtx
+
+
+def percentile_ms(samples_s: List[float]) -> Dict[str, float]:
+    """p50/p99 of a latency sample list, in milliseconds."""
+    if not samples_s:
+        return {"p50_ms": 0.0, "p99_ms": 0.0}
+    arr = np.asarray(samples_s) * 1e3
+    return {"p50_ms": round(float(np.percentile(arr, 50)), 3),
+            "p99_ms": round(float(np.percentile(arr, 99)), 3)}
+
+
+class PagedServingEngine:
+    """Continuous batching over a paged KV pool for one model instance."""
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX, *,
+                 block_size: int = 16, num_blocks: int = 64,
+                 max_in_flight: Optional[int] = None,
+                 params: Optional[Any] = None, seed: int = 0,
+                 on_token: Optional[Callable[[Request, int], None]] = None,
+                 on_finish: Optional[Callable[[Request], None]] = None):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.model = build_model(cfg, ctx)
+        if not self.model.supports_paged_decode():
+            raise ValueError(
+                f"arch {cfg.name!r} (family={cfg.family}, sliding_window="
+                f"{cfg.sliding_window}) needs the dense/ring/recurrent cache "
+                "path; the paged engine serves plain-attention archs")
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed)))
+        self.pager = KVPager(num_blocks, block_size)
+        kh, hd, g = cfg.kv_heads, cfg.resolved_head_dim, cfg.n_heads // cfg.kv_heads
+
+        # scheduler <-> autotune coupling: in-flight requests per round =
+        # the solved pipeline depth of the paged decode spec (clamped to 2+)
+        spec = paged_decode_spec(block_size, kh, g, hd, jnp.dtype(cfg.dtype),
+                                 max_blocks=max(num_blocks, 1))
+        self.solved_depth = autotune.choose_depth(
+            spec.profile(), kernel="paged_decode", vars=spec.all_vars())
+        # a round can't usefully exceed one block-owning request per block
+        self.round_width = int(max_in_flight
+                               or min(max(2, self.solved_depth), num_blocks))
+        self.scheduler = ContinuousBatchingScheduler(self.pager, self.round_width)
+
+        shape = (cfg.n_layers, self.pager.physical_blocks, block_size, kh, hd)
+        self.k_pools = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+        self.v_pools = jnp.zeros(shape, jnp.dtype(cfg.dtype))
+
+        self.on_token = on_token
+        self.on_finish = on_finish
+        self._requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._prefill_fns: Dict[int, Any] = {}  # jit cache keyed by padded len
+        self._decode_fn = None                  # jit cache keyed by table width
+        self._decode_fn_width = 0
+        self.rounds = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.token_latencies_s: List[float] = []
+        self.finished: List[Request] = []
+
+    # -------------------------------------------------------------- intake
+
+    def submit(self, prompt_tokens, max_new_tokens: int) -> int:
+        """Queue one request. Returns its id; results stream via callbacks
+        and land on `request(rid).generated`."""
+        prompt = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        max_total = len(prompt) + max_new_tokens
+        if self.pager.blocks_for(max_total) > self.pager.num_blocks:
+            raise ValueError(
+                f"request needs {self.pager.blocks_for(max_total)} blocks at "
+                f"full length; pool has {self.pager.num_blocks}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens))
+        self._requests[rid] = req
+        self.scheduler.submit(req)
+        return rid
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    # ------------------------------------------------------------- prefill
+
+    def _prefill_fn(self, padded: int):
+        fn = self._prefill_fns.get(padded)
+        if fn is None:
+            fn = jax.jit(lambda p, b: self.model.prefill(p, b, pad_to=padded))
+            self._prefill_fns[padded] = fn
+        return fn
+
+    def _prefill(self, req: Request) -> None:
+        """Run the prompt (context) through the model and scatter its KV
+        into the request's pages; sample the first new token."""
+        ctx_tokens = req.context
+        n = len(ctx_tokens)
+        blk = self.pager.block_size
+        padded = self.pager.blocks_for(n) * blk
+        batch = {"tokens": jnp.asarray([ctx_tokens], jnp.int32),
+                 "positions": jnp.arange(n, dtype=jnp.int32)[None]}
+        t0 = time.perf_counter()
+        cache, logits = self._prefill_fn(padded)(self.params, batch)
+        k = cache["layers"]["k"]  # [L, 1, padded, KH, D]
+        v = cache["layers"]["v"]
+        L, _, s_pad, kh, hd = k.shape
+        nb = s_pad // blk
+        bids = jnp.asarray(self.pager.block_table(req.rid)[:nb], jnp.int32)
+        self.k_pools = self.k_pools.at[:, bids].set(
+            k.reshape(L, nb, blk, kh, hd).astype(self.k_pools.dtype))
+        self.v_pools = self.v_pools.at[:, bids].set(
+            v.reshape(L, nb, blk, kh, hd).astype(self.v_pools.dtype))
+        first = int(jnp.argmax(logits[0, -1]))
+        jax.block_until_ready(self.k_pools)
+        self.prefill_s += time.perf_counter() - t0
+        self._emit(req, first)
+
+    def _emit(self, req: Request, token: int) -> None:
+        req.generated.append(token)
+        if self.on_token:
+            self.on_token(req, token)
+
+    # -------------------------------------------------------------- decode
+
+    def _decode(self, table_width: int):
+        if self._decode_fn is None or table_width != self._decode_fn_width:
+            model = self.model
+
+            def step(params, k_pools, v_pools, tokens, tables, lengths):
+                logits, k_pools, v_pools = model.decode_step_paged(
+                    params, k_pools, v_pools, tables, lengths,
+                    {"tokens": tokens})
+                return jnp.argmax(logits[:, -1], axis=-1), k_pools, v_pools
+
+            self._decode_fn = jax.jit(step, donate_argnums=(1, 2))
+            self._decode_fn_width = table_width
+        return self._decode_fn
+
+    def _table_width(self) -> int:
+        """Static block-table width: every request's table padded to the
+        worst case any submitted request can reach, so the jit is stable
+        across rounds of one workload."""
+        need = max((self.pager.blocks_for(len(r.prompt) + r.max_new_tokens)
+                    for r in self._requests.values()), default=1)
+        return max(need, 1)
+
+    def step_round(self) -> int:
+        """One scheduler round: admit + prefill, then decode one token for
+        every running request. Returns tokens emitted this round."""
+        for req in self.scheduler.admit():
+            self._prefill(req)
+            if req.done:  # max_new_tokens == 1: satisfied by the prefill token
+                self.scheduler.finish(req)
+                self.finished.append(req)
+                if self.on_finish:
+                    self.on_finish(req)
+
+        active = [r for r in self.scheduler.round()]
+        # reserve pool room for each request's next token; reserving may
+        # preempt later-admitted members of this same round
+        writable: List[Request] = []
+        for req in active:
+            if req.state is not RequestState.RUNNING:
+                continue  # preempted by an earlier reservation
+            self.scheduler.reserve_decode_slot(req)
+            writable.append(req)
+        writable = [r for r in writable if r.state is RequestState.RUNNING]
+        if not writable:
+            return 0
+
+        width = self.round_width
+        tw = self._table_width()
+        tokens = np.zeros((width, 1), np.int32)
+        tables = np.zeros((width, tw), np.int32)   # garbage page 0 padding
+        lengths = np.zeros((width,), np.int32)
+        for i, req in enumerate(writable):
+            tokens[i, 0] = req.generated[-1]
+            tables[i] = self.pager.padded_table(req.rid, tw)
+            # pager length already counts the reserved slot; the model wants
+            # the pre-write count (the new row's position)
+            lengths[i] = self.pager.length(req.rid) - 1
+
+        t0 = time.perf_counter()
+        nxt, self.k_pools, self.v_pools = self._decode(tw)(
+            self.params, self.k_pools, self.v_pools,
+            jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lengths))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        dt = time.perf_counter() - t0
+        self.decode_s += dt
+        self.rounds += 1
+
+        for i, req in enumerate(writable):
+            req.kv_len = self.pager.length(req.rid)
+            self._emit(req, int(nxt[i]))
+            self.token_latencies_s.append(dt)
+            if req.done:
+                self.scheduler.finish(req)
+                self.finished.append(req)
+                if self.on_finish:
+                    self.on_finish(req)
+        return len(writable)
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, max_rounds: int = 100_000) -> Dict[str, Any]:
+        """Serve until every submitted request finishes. Returns stats."""
+        rounds = 0
+        while self.scheduler.has_work():
+            if rounds >= max_rounds:
+                raise RuntimeError(f"no convergence in {max_rounds} rounds")
+            self.step_round()
+            rounds += 1
+        self.pager.check_invariants()
+        return self.stats()
+
+    def stats(self) -> Dict[str, Any]:
+        decoded = len(self.token_latencies_s)
+        agg_kv = sum(len(r.prompt) + len(r.generated) for r in self.finished)
+        pool_tokens = self.pager.pool_tokens
+        out = {
+            "engine": "paged",
+            "requests": len(self._requests),
+            "completed": len(self.finished),
+            "rounds": self.rounds,
+            "preemptions": self.scheduler.preemptions,
+            "round_width": self.round_width,
+            "solved_depth": self.solved_depth,
+            "block_size": self.pager.block_size,
+            "num_blocks": self.pager.num_blocks,
+            "pool_tokens": pool_tokens,
+            "aggregate_kv_tokens": agg_kv,
+            "kv_oversubscription": round(agg_kv / max(pool_tokens, 1), 2),
+            "prefill_s": round(self.prefill_s, 3),
+            "decode_s": round(self.decode_s, 3),
+            "decode_tok_per_s": round(decoded / max(self.decode_s, 1e-9), 1),
+        }
+        out.update(percentile_ms(self.token_latencies_s))
+        if self.finished:
+            out["sample_tokens"] = self.finished[0].generated[:8]
+        return out

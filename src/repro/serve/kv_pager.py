@@ -1,0 +1,148 @@
+"""Paged KV-cache block manager: fixed-size HBM pages, per-request tables.
+
+The serving-side analogue of the paper's far-memory arena: the KV cache is
+not a dense ``[batch, max_len]`` allocation but a pool of fixed-size blocks
+("pages") in HBM, and each request owns a *block table* — the list of pages
+its logical positions map onto. Pages are the coroutine tiles of the paged
+decode kernel (`kernels/decode_attention.paged_flash_decode`): the pipeline
+fetches them through the table, so physical placement is free and freed
+pages are reused immediately (defrag-free by construction — no page ever
+needs to move).
+
+This module is pure host-side bookkeeping (no jax): the engine owns the
+actual pool arrays and indexes them with the tables produced here.
+
+Layout convention (shared with models.lm / the kernel): block id 0 is a
+reserved *garbage* page that is never allocated. Round padding slots point
+every table entry at it, so their masked-out scatters/gathers land somewhere
+harmless. A pool advertising `num_blocks` usable pages is therefore
+physically `num_blocks + 1` blocks (`KVPager.physical_blocks`).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+import numpy as np
+
+GARBAGE_BLOCK = 0
+
+
+class PoolExhausted(RuntimeError):
+    """No free block available (caller should preempt or wait)."""
+
+
+class KVPager:
+    """Block pool allocator: alloc/append/free with leak-proof accounting."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(f"need >=1 blocks of >=1 tokens, got "
+                             f"{num_blocks}x{block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        # block ids 1..num_blocks; 0 is the reserved garbage page
+        self._free = deque(range(1, self.num_blocks + 1))
+        self._tables: Dict[int, List[int]] = {}
+        self._lengths: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- queries
+
+    @property
+    def physical_blocks(self) -> int:
+        """Blocks the engine must allocate (usable pool + garbage page 0)."""
+        return self.num_blocks + 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def pool_tokens(self) -> int:
+        """Token capacity of the usable pool."""
+        return self.num_blocks * self.block_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.free_blocks
+
+    def owns(self, rid: int) -> bool:
+        return rid in self._tables
+
+    def length(self, rid: int) -> int:
+        return self._lengths[rid]
+
+    def block_table(self, rid: int) -> List[int]:
+        return list(self._tables[rid])
+
+    def padded_table(self, rid: int, max_blocks: int) -> np.ndarray:
+        """Block table padded with the garbage page to a fixed width."""
+        t = self._tables[rid]
+        if len(t) > max_blocks:
+            raise ValueError(f"request {rid} uses {len(t)} blocks > "
+                             f"table width {max_blocks}")
+        out = np.full((max_blocks,), GARBAGE_BLOCK, np.int32)
+        out[: len(t)] = t
+        return out
+
+    # ----------------------------------------------------------- lifecycle
+
+    def alloc(self, rid: int, n_tokens: int) -> List[int]:
+        """Claim blocks for `n_tokens` stored tokens (prefill). Returns the
+        request's block table; raises `PoolExhausted` leaving state intact."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid} already has an allocation")
+        need = self.blocks_for(n_tokens)
+        if need > self.free_blocks:
+            raise PoolExhausted(
+                f"request {rid}: need {need} blocks, {self.free_blocks} free")
+        blocks = [self._free.popleft() for _ in range(need)]
+        self._tables[rid] = blocks
+        self._lengths[rid] = int(n_tokens)
+        return list(blocks)
+
+    def append_token(self, rid: int) -> int:
+        """Reserve room for one more token; grows the table by one block at
+        page boundaries. Returns the token's position (the old length)."""
+        pos = self._lengths[rid]
+        if pos == len(self._tables[rid]) * self.block_size:
+            if not self._free:
+                raise PoolExhausted(
+                    f"request {rid}: pool exhausted growing past {pos} tokens")
+            self._tables[rid].append(self._free.popleft())
+        self._lengths[rid] = pos + 1
+        return pos
+
+    def free(self, rid: int) -> int:
+        """Release a request's blocks back to the pool. Returns the count."""
+        blocks = self._tables.pop(rid)
+        del self._lengths[rid]
+        self._free.extend(blocks)
+        return len(blocks)
+
+    # ---------------------------------------------------------- invariants
+
+    def check_invariants(self) -> None:
+        """Every usable block is free xor owned by exactly one request, and
+        every table is exactly as long as its length requires."""
+        owned: List[int] = []
+        for rid, table in self._tables.items():
+            n, used = self._lengths[rid], len(table)
+            if used != self.blocks_for(n):
+                raise AssertionError(
+                    f"request {rid}: {used} blocks for {n} tokens")
+            owned.extend(table)
+        seen = set(owned)
+        if len(seen) != len(owned):
+            raise AssertionError("a block is owned by two requests")
+        if GARBAGE_BLOCK in seen:
+            raise AssertionError("the garbage page was allocated")
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate block on the free list")
+        if free & seen:
+            raise AssertionError("a block is both free and owned")
+        if free | seen != set(range(1, self.num_blocks + 1)):
+            raise AssertionError("a block leaked (neither free nor owned)")

@@ -1,0 +1,152 @@
+"""Continuous-batching request scheduler over the KV block pool.
+
+The policy mirrors the paper's dynamic coroutine scheduler (§III-D): a
+*ready request* is a coroutine, the block pool is the context arena, and the
+number of requests decoded per round is bounded by the pipeline depth
+`core.autotune` solves for the paged decode `CoroSpec` — the serving-side
+analogue of "keep exactly enough coroutines in flight to hide latency,
+capped by the context the scratchpad can hold".
+
+States:
+
+  WAITING  - queued; admitted when the pool can hold its prompt
+  RUNNING  - blocks allocated, decoded every round
+  FINISHED - done; blocks returned to the pool
+
+Preemption: when a running request needs a page and the pool is dry, the
+*latest-admitted* other running request is evicted — its pages are freed and
+it re-queues at the front of the waiting line, keeping everything it has
+generated so far (recompute-on-readmit: its next prefill covers prompt +
+generated). Evicting the newest request is the policy that never starves
+the oldest one, so every admitted request eventually finishes as long as
+the pool can hold a single maximal request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, List
+
+from repro.serve.kv_pager import KVPager, PoolExhausted
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request flowing through the engine."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    state: RequestState = RequestState.WAITING
+    generated: List[int] = dataclasses.field(default_factory=list)
+    kv_len: int = 0                  # tokens with KV stored in the pool
+    preemptions: int = 0
+    admit_seq: int = -1              # order of the (latest) admission
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens to prefill on (re-)admission: prompt + generated so far."""
+        return self.prompt + self.generated
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ContinuousBatchingScheduler:
+    """Admit / evict / preempt on pool pressure; assemble decode rounds."""
+
+    def __init__(self, pager: KVPager, max_in_flight: int):
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        self.pager = pager
+        self.max_in_flight = int(max_in_flight)
+        self.waiting: Deque[Request] = deque()
+        self.running: List[Request] = []
+        self.preemptions = 0
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    # ---------------------------------------------------------- admission
+
+    def admit(self) -> List[Request]:
+        """Move waiting requests to RUNNING while the round has slots and
+        the pool can hold their context. Returns the newly admitted batch
+        (the engine prefills them). FIFO: admission stops at the first
+        request that does not fit, so a large head request cannot be
+        starved by small ones slipping past it."""
+        admitted: List[Request] = []
+        while self.waiting and len(self.running) < self.max_in_flight:
+            req = self.waiting[0]
+            n_ctx = len(req.context)
+            if not self.pager.can_alloc(n_ctx):
+                break
+            self.waiting.popleft()
+            self.pager.alloc(req.rid, n_ctx)
+            req.kv_len = n_ctx
+            req.state = RequestState.RUNNING
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    # --------------------------------------------------------- preemption
+
+    def _preempt_one(self, protect: Request) -> bool:
+        """Evict the latest-admitted running request other than `protect`."""
+        victims = [r for r in self.running if r is not protect]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda r: r.admit_seq)
+        self.pager.free(victim.rid)
+        victim.kv_len = 0
+        victim.state = RequestState.WAITING
+        victim.preemptions += 1
+        self.preemptions += 1
+        self.running.remove(victim)
+        self.waiting.appendleft(victim)
+        return True
+
+    def reserve_decode_slot(self, req: Request) -> int:
+        """Reserve pool room for `req`'s next token, preempting on pressure.
+
+        Returns the token's write position. Raises `PoolExhausted` only if
+        `req` *alone* overflows the pool (no victims left to evict) — size
+        the pool for at least one maximal request. A caller iterating a
+        round must re-check each request's state first: reserving for an
+        early request may evict a later one from the same round."""
+        while True:
+            try:
+                return self.pager.append_token(req.rid)
+            except PoolExhausted:
+                if not self._preempt_one(req):
+                    # nothing left to evict: the request alone overflows the
+                    # pool — surface it rather than spinning
+                    raise
+
+    # ------------------------------------------------------------- rounds
+
+    def round(self) -> List[Request]:
+        """The requests decoding this round, oldest admission first."""
+        return sorted(self.running, key=lambda r: r.admit_seq)
+
+    def finish(self, req: Request) -> None:
+        self.pager.free(req.rid)
+        req.state = RequestState.FINISHED
+        self.running.remove(req)

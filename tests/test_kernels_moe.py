@@ -7,7 +7,13 @@ import pytest
 from repro.configs import get_config
 from repro.kernels.moe_gmm.ops import moe_gmm
 from repro.kernels.moe_gmm.ref import gmm_ref
-from repro.models.moe import moe_dense, moe_param_specs, router_topk
+from repro.models.moe import (
+    _expert_ffn,
+    _gmm_eligible,
+    moe_dense,
+    moe_param_specs,
+    router_topk,
+)
 from repro.models import params as pm
 
 
@@ -27,6 +33,35 @@ def test_router_topk_normalized(rng):
     np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
     assert int(experts.max()) < cfg.n_experts
     assert float(aux) > 0.0
+
+
+def test_expert_ffn_gmm_backend_matches_dense(rng):
+    """The streamed-weight gmm backend (TPU dispatch path, run here in
+    interpret mode) must agree with the jnp-einsum twin."""
+    e, c, dm, f = 2, 8, 128, 256
+    xs = jnp.asarray(rng.randn(e, c, dm), jnp.float32)
+    wg = jnp.asarray(rng.randn(e, dm, f) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.randn(e, dm, f) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.randn(e, f, dm) * 0.1, jnp.float32)
+    got = _expert_ffn(xs, wg, wu, wd, use_gmm=True)
+    want = _expert_ffn(xs, wg, wu, wd, use_gmm=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_expert_ffn_gmm_gating(rng):
+    """Shapes the kernel can't tile (or mismatched expert batching) fall
+    back to the einsum twin instead of asserting inside the kernel."""
+    e, c, dm, f = 2, 4, 96, 96  # not divisible by the 128 f_tile
+    xs = jnp.asarray(rng.randn(e, c, dm), jnp.float32)
+    wg = jnp.asarray(rng.randn(e, dm, f), jnp.float32)
+    wu = jnp.asarray(rng.randn(e, dm, f), jnp.float32)
+    wd = jnp.asarray(rng.randn(e, f, dm), jnp.float32)
+    assert not _gmm_eligible(xs, wg, wu, wd)
+    assert not _gmm_eligible(xs[:1], jnp.zeros((4, dm, 128)),
+                             jnp.zeros((4, dm, 128)), jnp.zeros((4, 128, dm)))
+    out = _expert_ffn(xs, wg, wu, wd, use_gmm=True)  # falls back, no raise
+    assert out.shape == (e, c, dm)
 
 
 def test_moe_dense_combines_topk_only(rng):

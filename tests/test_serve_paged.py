@@ -1,0 +1,317 @@
+"""Paged-KV serving subsystem: pager invariants, scheduler pressure,
+paged decode parity on ragged lengths, engine end-to-end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.decode_attention.ops import paged_decode_attention
+from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+from repro.models import build_model
+from repro.models import common as mc
+from repro.serve import (
+    ContinuousBatchingScheduler,
+    KVPager,
+    PagedServingEngine,
+    PoolExhausted,
+    Request,
+    RequestState,
+)
+from repro.sharding import NULL_CTX
+
+
+# ------------------------------------------------------------------- pager
+
+
+def test_pager_randomized_schedule_no_leak_no_double_own(rng):
+    """Blocks stay free-xor-owned through a randomized admit/evict/append
+    schedule; the garbage page is never handed out."""
+    pager = KVPager(num_blocks=24, block_size=4)
+    live = []
+    next_rid = 0
+    for _ in range(600):
+        op = rng.choice(["alloc", "append", "free"])
+        if op == "alloc":
+            n = int(rng.randint(1, 30))
+            if pager.can_alloc(n):
+                pager.alloc(next_rid, n)
+                live.append(next_rid)
+                next_rid += 1
+            else:
+                with pytest.raises(PoolExhausted):
+                    pager.alloc(next_rid, n)
+        elif op == "append" and live:
+            rid = live[rng.randint(len(live))]
+            try:
+                pos = pager.append_token(rid)
+                assert pos == pager.length(rid) - 1
+            except PoolExhausted:
+                assert pager.free_blocks == 0
+        elif op == "free" and live:
+            rid = live.pop(rng.randint(len(live)))
+            pager.free(rid)
+        pager.check_invariants()
+    for rid in live:
+        pager.free(rid)
+    pager.check_invariants()
+    assert pager.free_blocks == pager.num_blocks
+
+
+def test_pager_failed_alloc_leaves_state_intact():
+    pager = KVPager(num_blocks=4, block_size=4)
+    pager.alloc(0, 12)  # 3 blocks
+    with pytest.raises(PoolExhausted):
+        pager.alloc(1, 8)  # needs 2, only 1 free
+    pager.check_invariants()
+    assert pager.free_blocks == 1
+    assert not pager.owns(1)
+
+
+def test_pager_padded_table_uses_garbage_page():
+    pager = KVPager(num_blocks=8, block_size=4)
+    pager.alloc(7, 10)
+    t = pager.padded_table(7, 6)
+    assert t.shape == (6,) and t.dtype == np.int32
+    assert (t[3:] == 0).all() and (t[:3] > 0).all()
+
+
+# --------------------------------------------------------------- scheduler
+
+
+def _req(rid, prompt_len, max_new=4):
+    return Request(rid=rid, prompt=list(range(1, prompt_len + 1)),
+                   max_new_tokens=max_new)
+
+
+def test_scheduler_admission_bounded_by_pool_and_round_width():
+    pager = KVPager(num_blocks=4, block_size=4)
+    sched = ContinuousBatchingScheduler(pager, max_in_flight=8)
+    for rid in range(3):
+        sched.submit(_req(rid, prompt_len=8))  # 2 blocks each
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]  # third doesn't fit
+    assert sched.admit() == []
+    sched.finish(admitted[0])
+    assert [r.rid for r in sched.admit()] == [2]
+    pager.check_invariants()
+
+
+def test_scheduler_admission_is_fifo_under_pressure():
+    """A big head request blocks smaller ones behind it (no starvation)."""
+    pager = KVPager(num_blocks=4, block_size=4)
+    sched = ContinuousBatchingScheduler(pager, max_in_flight=8)
+    sched.submit(_req(0, prompt_len=8))
+    sched.submit(_req(1, prompt_len=30))  # 8 blocks: never fits beside rid 0
+    sched.submit(_req(2, prompt_len=4))
+    assert [r.rid for r in sched.admit()] == [0]
+    assert sched.admit() == []  # rid 2 must wait its turn behind rid 1
+
+
+def test_scheduler_preempts_latest_admitted_on_growth():
+    pager = KVPager(num_blocks=3, block_size=4)
+    sched = ContinuousBatchingScheduler(pager, max_in_flight=4)
+    a, b, c = _req(0, 4), _req(1, 4), _req(2, 4)
+    for r in (a, b, c):
+        sched.submit(r)
+    assert len(sched.admit()) == 3  # one block each, pool now full
+    # growing the oldest evicts the newest, never the oldest itself
+    for _ in range(pager.block_size):
+        sched.reserve_decode_slot(a)
+    assert c.state is RequestState.WAITING and c.preemptions == 1
+    assert a.state is RequestState.RUNNING
+    assert sched.waiting[0] is c  # re-queued at the front
+    pager.check_invariants()
+
+
+def test_scheduler_lone_request_overflow_raises():
+    pager = KVPager(num_blocks=1, block_size=2)
+    sched = ContinuousBatchingScheduler(pager, max_in_flight=2)
+    r = _req(0, prompt_len=2)
+    sched.submit(r)
+    sched.admit()
+    with pytest.raises(PoolExhausted):
+        sched.reserve_decode_slot(r)  # nothing else to evict
+
+
+# ------------------------------------------------- paged attention parity
+
+
+def _paged_problem(rng, lengths, *, h, kh, d, blk, extra_blocks=3):
+    """Random pools + disjoint shuffled block tables for given ragged
+    lengths. Returns (q, k_pool, v_pool, block_tables [B, M])."""
+    lengths = np.asarray(lengths, np.int32)
+    bsz = len(lengths)
+    nb_per = [-(-int(n) // blk) for n in lengths]
+    m = max(nb_per)
+    total = sum(nb_per)
+    nb = total + 1 + extra_blocks  # + garbage page 0
+    q = jnp.asarray(rng.randn(bsz, h, d), jnp.float32)
+    kp = jnp.asarray(rng.randn(nb, blk, kh, d), jnp.float32)
+    vp = jnp.asarray(rng.randn(nb, blk, kh, d), jnp.float32)
+    ids = rng.permutation(np.arange(1, nb))[:total]
+    bt = np.zeros((bsz, m), np.int32)
+    off = 0
+    for r, n in enumerate(nb_per):
+        bt[r, :n] = ids[off:off + n]
+        off += n
+    return q, kp, vp, jnp.asarray(bt)
+
+
+def _dense_ref_rows(q, kp, vp, bt, lengths):
+    """Row-by-row oracle via models.common.decode_attention (the dense
+    public entry) over each request's gathered pages at its own position."""
+    blk, kh, d = kp.shape[1], kp.shape[2], kp.shape[3]
+    m = bt.shape[1]
+    zeros = jnp.zeros((1, 1, kh, d), q.dtype)
+    outs = []
+    for r, n in enumerate(lengths):
+        k = kp[bt[r]].reshape(1, m * blk, kh, d)
+        v = vp[bt[r]].reshape(1, m * blk, kh, d)
+        o, _, _ = mc.decode_attention(NULL_CTX, q[r:r + 1, None], k, v,
+                                      zeros, zeros, int(n) - 1, update=False)
+        outs.append(o[:, 0])
+    return jnp.concatenate(outs, axis=0)
+
+
+def test_paged_decode_matches_dense_on_ragged_lengths(rng):
+    """One round, per-request lengths spanning 8x: kernel vs the dense
+    models.common.decode_attention entry AND the kernel's own ref oracle."""
+    lengths = [16, 40, 128]  # 8x spread within one round
+    q, kp, vp, bt = _paged_problem(rng, lengths, h=8, kh=2, d=16, blk=16)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = paged_decode_attention(q, kp, vp, bt, lens)
+    ref = _dense_ref_rows(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    oracle = paged_decode_attention_ref(q, kp, vp, bt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_jnp_twin_matches_dense_on_ragged_lengths(rng):
+    lengths = [4, 27, 64]
+    q, kp, vp, bt = _paged_problem(rng, lengths, h=4, kh=4, d=8, blk=8)
+    out = mc.paged_decode_attention(q[:, None], kp, vp, bt,
+                                    jnp.asarray(lengths, jnp.int32))[:, 0]
+    ref = _dense_ref_rows(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_explicit_depth_and_padding_rows(rng):
+    """Depth sweep + a zero-length padding slot pointing at the garbage
+    page: real rows stay exact, the padding row is finite garbage."""
+    lengths = [32, 8, 0]
+    q, kp, vp, bt = _paged_problem(rng, lengths, h=4, kh=2, d=16, blk=8)
+    bt = bt.at[2].set(0)  # padding slot: all garbage page
+    ref = _dense_ref_rows(q, kp, vp, bt, lengths[:2])
+    for depth in (1, 2, 5):
+        out = paged_decode_attention(q, kp, vp, bt,
+                                     jnp.asarray(lengths, jnp.int32),
+                                     depth=depth)
+        np.testing.assert_allclose(np.asarray(out[:2]), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kh,h,blk", [(2, 8, 16), (1, 4, 32), (4, 4, 8)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_paged_decode_ragged_sweep(kh, h, blk, seed):
+    """Long ragged-parity sweep: random length mixes with >=4x spread."""
+    rng = np.random.RandomState(100 + seed)
+    base = int(rng.randint(1, 2 * blk))
+    lengths = sorted(rng.randint(base, 8 * base + 1, size=4).tolist())
+    lengths[0], lengths[-1] = base, max(lengths[-1], 4 * base)  # >=4x spread
+    q, kp, vp, bt = _paged_problem(rng, lengths, h=h, kh=kh, d=16, blk=blk)
+    out = paged_decode_attention(q, kp, vp, bt, jnp.asarray(lengths, jnp.int32))
+    ref = _dense_ref_rows(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ engine
+
+
+def _f32_cfg():
+    return get_config("yi-6b").reduced().replace(dtype="float32",
+                                                 param_dtype="float32")
+
+
+def test_engine_matches_dense_generation():
+    """One request through the paged engine equals the dense prefill +
+    decode_step loop token-for-token (float32)."""
+    cfg = _f32_cfg()
+    rng = np.random.default_rng(1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = rng.integers(0, cfg.vocab, 12)
+    gen = 6
+
+    cache, logits = model.prefill(
+        params, {"tokens": jnp.asarray([prompt], jnp.int32)}, pad_to=12 + gen)
+    tok = int(jnp.argmax(logits[0, -1]))
+    dense = [tok]
+    for _ in range(gen - 1):
+        logits, cache = model.decode_step(
+            params, cache, {"tokens": jnp.asarray([[tok]], jnp.int32)})
+        tok = int(jnp.argmax(logits[0, -1]))
+        dense.append(tok)
+
+    eng = PagedServingEngine(cfg, block_size=4, num_blocks=16, params=params)
+    rid = eng.submit(prompt, max_new_tokens=gen)
+    stats = eng.run()
+    assert eng.request(rid).generated == dense
+    assert stats["completed"] == 1
+
+
+def test_engine_oversubscribes_dense_footprint():
+    """A fixed pool serves aggregate KV >= 2x its own capacity (i.e. >= 2x
+    any dense [batch, max_len] carve-up of the same memory): completions
+    free pages that later admissions reuse."""
+    cfg = _f32_cfg()
+    rng = np.random.default_rng(2)
+    blk, gen = 4, 5
+    plens = [5, 17, 6, 15, 7, 13, 9, 16]
+    blocks_per_req = -(-(max(plens) + gen) // blk)
+    eng = PagedServingEngine(cfg, block_size=blk,
+                             num_blocks=2 * blocks_per_req, max_in_flight=3)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, n), max_new_tokens=gen)
+            for n in plens]
+    stats = eng.run()  # run() checks pager invariants at drain
+    assert stats["completed"] == len(plens)
+    assert stats["aggregate_kv_tokens"] >= 2 * stats["pool_tokens"]
+    for rid in rids:
+        assert len(eng.request(rid).generated) == gen
+
+
+def test_engine_preemption_under_pool_pressure():
+    """A pool barely bigger than one request forces preemption; the evicted
+    request still finishes with the full token count."""
+    cfg = _f32_cfg()
+    rng = np.random.default_rng(3)
+    blk, gen = 4, 6
+    plens = [10, 10, 10]
+    blocks_per_req = -(-(max(plens) + gen) // blk)
+    eng = PagedServingEngine(cfg, block_size=blk,
+                             num_blocks=blocks_per_req + 2, max_in_flight=3)
+    rids = [eng.submit(rng.integers(0, cfg.vocab, n), max_new_tokens=gen)
+            for n in plens]
+    stats = eng.run()
+    assert stats["preemptions"] > 0
+    assert stats["completed"] == len(plens)
+    for rid in rids:
+        assert len(eng.request(rid).generated) == gen
+
+
+def test_engine_rejects_unservable_shapes():
+    cfg = _f32_cfg()
+    eng = PagedServingEngine(cfg, block_size=4, num_blocks=4)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(1, 9), max_new_tokens=64)  # 18 blocks > pool
+    with pytest.raises(ValueError):
+        eng.submit([], max_new_tokens=1)
+    with pytest.raises(ValueError):
+        PagedServingEngine(get_config("mamba2-130m").reduced(),
+                           block_size=4, num_blocks=4)
