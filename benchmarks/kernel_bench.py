@@ -13,6 +13,8 @@ choice.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -21,6 +23,7 @@ import jax.numpy as jnp
 from benchmarks.common import csv_table, timed
 from repro.core import autotune
 from repro.core.descriptors import plan_gather
+from repro.core.machine import get_machine
 from repro.core.schedule import TileProfile, solve_depth, achieved_bandwidth
 from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
@@ -192,6 +195,83 @@ def triad_rows():
              autotune.last_choice("stream_triad")]]
 
 
+def _json_workloads():
+    """One small run per kernel family: (spec for the static solve, thunk).
+
+    Shapes mirror what the thunk actually launches so the static depth and
+    the telemetry entry describe the same tile.
+    """
+    from repro.kernels.coro_scatter_add.ops import coro_scatter_add
+    from repro.kernels.moe_gmm.ops import moe_gmm
+    from repro.kernels.ssd_scan.ops import ssd
+
+    rng = np.random.RandomState(7)
+    f32 = jnp.float32
+
+    table_g = jnp.asarray(rng.randn(256, 128), f32)
+    idx_g = jnp.asarray(rng.randint(0, 256, 64), jnp.int32)
+
+    table_s = jnp.asarray(rng.randn(256, 128), f32)
+    idx_s = rng.randint(0, 256, 32)
+    upd_s = jnp.asarray(rng.randn(32, 128), f32)
+
+    q = jnp.asarray(rng.randn(2, 8, 16), f32)
+    k = jnp.asarray(rng.randn(2, 128, 2, 16), f32)
+    v = jnp.asarray(rng.randn(2, 128, 2, 16), f32)
+
+    xs = jnp.asarray(rng.randn(2, 16, 64), f32)
+    w = jnp.asarray(rng.randn(2, 64, 256), f32)
+
+    x = jnp.asarray(rng.randn(1, 128, 2, 8), f32)
+    dt = jnp.asarray(rng.rand(1, 128, 2), f32)
+    A = jnp.asarray(-np.abs(rng.randn(2)), f32)
+    B = jnp.asarray(rng.randn(1, 128, 16), f32)
+    C = jnp.asarray(rng.randn(1, 128, 16), f32)
+
+    tb = jnp.asarray(rng.randn(256, 64), f32)
+    tc = jnp.asarray(rng.randn(256, 64), f32)
+
+    return [
+        (row_gather_spec(8, 128, f32),
+         lambda: coro_gather(table_g, idx_g)),
+        (scatter_add_spec(8, 128, f32),
+         lambda: coro_scatter_add(table_s, idx_s, upd_s)),
+        (decode_spec(64, 2, 4, 16, f32),
+         lambda: decode_attention(q, k, v, 127, blk=64)),
+        (gmm_spec(16, 64, 128, f32, f_total=256),
+         lambda: moe_gmm(xs, w, f_tile=128)),
+        (ssd_spec(64, 2, 8, 16, f32, seq_len=128),
+         lambda: ssd(x, dt, A, B, C, chunk=64)),
+        (triad_spec(128, 64, f32),
+         lambda: stream_triad(tb, tc, 2.5)),
+    ]
+
+
+def json_report() -> dict:
+    """Machine-stamped report (ISSUE-6 CI lane): active profile, per-kernel
+    static solve vs the depth actually run, and observed p99 per-tile latency
+    from the always-on telemetry. Each workload runs twice — the first run is
+    compile warmup (dropped by the warmup skip), the second records."""
+    m = get_machine()
+    workloads = _json_workloads()
+    for _, run in workloads:
+        run()
+        run()
+    summ = autotune.telemetry_summary()
+    kernels = {}
+    for spec, _ in workloads:
+        t = summ["kernels"].get(spec.name, {})
+        kernels[spec.name] = {
+            "static_depth": autotune.choose_depth(spec.profile(),
+                                                  vars=spec.all_vars()),
+            "ran_depth": t.get("depth"),
+            "mode": t.get("mode"),
+            "samples": t.get("samples", 0),
+            "observed_p99_us": t.get("p99_us"),
+        }
+    return {"machine": m.name, "profile": m.summary(), "kernels": kernels}
+
+
 def table() -> str:
     s = csv_table(["kernel", "shape", "us_per_call", "allclose", "auto_depth"],
                   gather_rows() + triad_rows())
@@ -208,5 +288,16 @@ def table() -> str:
     return s
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="machine-stamped JSON report instead of CSV tables")
+    args = ap.parse_args(argv)
+    if args.json:
+        print(json.dumps(json_report(), indent=2))
+    else:
+        print(table())
+
+
 if __name__ == "__main__":
-    print(table())
+    main()

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core import autotune, sim
 from repro.core.descriptors import plan_gather
+from repro.core.machine import get_machine
 from repro.core.schedule import TileProfile, achieved_bandwidth, solve_depth
 from repro.kernels.coro_gather.coro_gather import row_gather_spec
 from repro.kernels.coro_gather.ops import coro_gather
@@ -22,6 +23,12 @@ from repro.kernels.coro_scatter_add.ops import coro_scatter_add
 
 
 def main():
+    m = get_machine()
+    print(f"machine profile: {m.name} "
+          f"(hbm latency {m.hbm_latency_s * 1e9:.0f}ns, "
+          f"{m.hbm_bw / 1e9:.0f} GB/s, {m.request_slots} request slots; "
+          f"switch with REPRO_MACHINE=v5e-far-800ns)")
+
     rng = np.random.RandomState(0)
     table = jnp.asarray(rng.randn(1024, 128), jnp.float32)
     idx = rng.randint(0, 1024, 256).astype(np.int32)
@@ -62,6 +69,9 @@ def main():
         s = sim.speedup("coroamu-full", g, latency_ns=lat)
         print(f"CoroAMU-Full GUPS @{lat}ns: {s:.1f}x over serial "
               f"(paper: {'29.0' if lat == 200 else '59.8'}x)")
+
+    # every launched pipeline above fed the always-on transfer telemetry
+    print("telemetry:", autotune.telemetry_summary())
 
 
 if __name__ == "__main__":

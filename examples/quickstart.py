@@ -12,6 +12,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import jax
 
 from repro.configs import get_config
+from repro.core.autotune import telemetry_summary
+from repro.core.machine import get_machine
 from repro.data.pipeline import DataConfig, MarkovTask
 from repro.launch.serve import serve
 from repro.models import build_model
@@ -20,6 +22,10 @@ from repro.runtime.train_loop import train
 
 
 def main():
+    # 0) the active machine model every depth solve / roofline term reads
+    print(f"machine profile: {get_machine().name} "
+          f"(REPRO_MACHINE selects; see repro.core.machine)")
+
     # 1) pick an assigned architecture at smoke scale
     cfg = get_config("granite-3-2b").reduced().replace(vocab=128)
     model = build_model(cfg)
@@ -45,6 +51,9 @@ def main():
     # 4) serve: batched prefill + decode with KV caches
     stats = serve(cfg, batch=2, prompt_len=16, gen=6)
     print("serve:", stats)
+
+    # 5) the decode loop fed the always-on transfer telemetry as it ran
+    print("telemetry:", telemetry_summary())
 
 
 if __name__ == "__main__":

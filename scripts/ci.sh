@@ -27,6 +27,22 @@ python -m pytest -q -m "not slow"
 echo "== paged-serving smoke: examples/serve_batched.py --engine paged =="
 python examples/serve_batched.py --engine paged
 
+echo "== machine smoke: far-memory profile must solve strictly deeper =="
+near_json="$(python scripts/machine_smoke.py)"
+far_json="$(REPRO_MACHINE=v5e-far-800ns python scripts/machine_smoke.py)"
+echo "$near_json"
+echo "$far_json"
+python - "$near_json" "$far_json" <<'EOF'
+import json, sys
+near, far = (json.loads(a) for a in sys.argv[1:3])
+assert near["machine"] == "v5e" and far["machine"] == "v5e-far-800ns", (near, far)
+assert far["solved_depth"] > near["solved_depth"], (
+    f"v5e-far-800ns depth {far['solved_depth']} must exceed "
+    f"v5e depth {near['solved_depth']}")
+print(f"ok: depth {near['solved_depth']} (v5e) -> "
+      f"{far['solved_depth']} (v5e-far-800ns)")
+EOF
+
 if [[ "${1:-}" == "fast" ]]; then
     exit 0
 fi

@@ -1,0 +1,48 @@
+"""CI smoke: the machine profile must reach the depth solver end-to-end.
+
+Runs one real kernel (coro_gather, interpret mode) under the ACTIVE machine
+profile (`REPRO_MACHINE`) and prints a one-line JSON record with the
+unclamped solved depth for the row-gather spec, the depth the launched
+pipeline actually ran (clamped to its tile count), and the telemetry state.
+`scripts/ci.sh` runs this twice — default profile and `v5e-far-800ns` — and
+asserts the far solve is strictly deeper (the paper's latency dial, wired
+through the env var).
+
+  REPRO_MACHINE=v5e-far-800ns PYTHONPATH=src python scripts/machine_smoke.py
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.core.machine import get_machine
+from repro.kernels.coro_gather.coro_gather import row_gather_spec
+from repro.kernels.coro_gather.ops import coro_gather
+from repro.kernels.coro_gather.ref import gather_ref
+
+
+def main():
+    m = get_machine()
+    spec = row_gather_spec(8, 128, jnp.float32)
+    solved = autotune.choose_depth(spec.profile(), vars=spec.all_vars())
+
+    rng = np.random.RandomState(0)
+    table = jnp.asarray(rng.randn(64, 128), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 64, 32), jnp.int32)
+    out = coro_gather(table, idx, interpret=True)
+    assert out.shape == (32, 128)
+    assert bool(jnp.allclose(out, gather_ref(table, idx)))
+
+    print(json.dumps({
+        "machine": m.name,
+        "hbm_latency_ns": round(m.hbm_latency_s * 1e9, 1),
+        "solved_depth": solved,
+        "ran_depth": autotune.last_choice("row_gather"),
+    }))
+
+
+if __name__ == "__main__":
+    main()

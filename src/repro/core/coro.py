@@ -24,7 +24,10 @@ A kernel built on this module keeps `depth` tiles in flight: while slot k's
 data is crossing HBM<->VMEM, slots k-1, k-2, ... are being consumed — the
 paper's interleaving of memory-driven coroutines. `depth=None` lets
 `core.autotune.choose_depth` solve the depth from the spec's tile profile,
-with the VMEM cap taken from the classified context bytes.
+with the VMEM cap taken from the classified context bytes, for the active
+`core.machine` profile. Every launched pipeline is wall-clocked and fed
+back to `autotune.observe_pipeline` (always-on transfer telemetry) so the
+adaptive re-solve learns from real runs without caller wiring.
 
 Layering:
 
@@ -41,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
@@ -201,6 +205,23 @@ class CoroRefs:
 
     def __init__(self, mapping):
         self.__dict__.update(mapping)
+
+
+def _observe_pipeline(kernel: str, t0: float, out, n_tiles: int) -> None:
+    """Always-on transfer telemetry (ISSUE-6): wall-clock the launched
+    pipeline and feed `autotune.observe_pipeline` (which drops the compile
+    warmup and records wall/tiles as a per-tile transfer sample). Skipped
+    under jit tracing — there is no wall clock to observe — and when
+    `autotune.set_telemetry(False)`/``REPRO_TELEMETRY=0`` turned it off."""
+    from repro.core import autotune  # local: mirror coro_call's lazy import
+
+    if not autotune.telemetry_enabled():
+        return
+    leaves = jax.tree_util.tree_leaves(out)
+    if any(isinstance(x, jax.core.Tracer) for x in leaves):
+        return
+    jax.block_until_ready(out)
+    autotune.observe_pipeline(kernel, time.perf_counter() - t0, n_tiles)
 
 
 # ----------------------------------------------------------- the rotation
@@ -519,4 +540,7 @@ def coro_call(
                               out_specs=out_specs, out_shape=out_shape,
                               scratch_shapes=scratch, interpret=interpret,
                               **kwargs)
-    return call(*operands)
+    t0 = time.perf_counter()
+    out = call(*operands)
+    _observe_pipeline(spec.name, t0, out, n_tiles)
+    return out

@@ -12,6 +12,14 @@ the worst-case latency — adaptivity moves into `solve_depth`, which takes the
 latency bound as an input instead of polling at run time. `adaptive_depth`
 re-solves from observed latency samples (the run-time feedback loop the
 paper's Return Block implements in hardware).
+
+Every hardware constant lives in `core.machine` (one `MachineModel`, many
+profiles — the paper's latency dial as `REPRO_MACHINE=v5e-far-800ns`). The
+solver reads the ACTIVE profile by default and takes `machine=` to solve
+for another one; the legacy module constants (`VMEM_BYTES`,
+`HBM_LATENCY_S`, `HBM_BW`, `PEAK_FLOPS`, `REQUEST_SLOTS`) are thin aliases
+of the active profile via module `__getattr__`, kept for callers that
+snapshot them (tests, benchmarks).
 """
 from __future__ import annotations
 
@@ -19,14 +27,7 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
-# v5e-class constants (see repro.roofline)
-VMEM_BYTES = 128 * 1024 * 1024
-HBM_LATENCY_S = 700e-9          # HBM round-trip seen by a DMA
-HBM_BW = 819e9
-PEAK_FLOPS = 197e12
-# the paper's "capped only by SPM request slots": outstanding-DMA bound per
-# pipeline. Also keeps the kernels' Python-unrolled warmup loops bounded.
-REQUEST_SLOTS = 64
+from repro.core.machine import MachineModel, get_machine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,19 +40,28 @@ class TileProfile:
     shared_bytes: int = 0        # depth-independent VMEM residents
 
 
-def tile_compute_s(p: TileProfile) -> float:
-    return p.flops_per_tile / PEAK_FLOPS
+def tile_compute_s(p: TileProfile, *,
+                   machine: Optional[MachineModel] = None) -> float:
+    m = machine or get_machine()
+    return p.flops_per_tile / m.peak_flops
 
 
-def tile_transfer_s(p: TileProfile) -> float:
-    return p.tile_bytes / HBM_BW
+def tile_transfer_s(p: TileProfile, *,
+                    machine: Optional[MachineModel] = None) -> float:
+    m = machine or get_machine()
+    return p.tile_bytes / m.hbm_bw
 
 
-def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
-                vmem_budget: int = VMEM_BYTES,
-                slot_limit: int = REQUEST_SLOTS,
+def solve_depth(p: TileProfile, *, machine: Optional[MachineModel] = None,
+                latency_s: Optional[float] = None,
+                vmem_budget: Optional[int] = None,
+                slot_limit: Optional[int] = None,
                 vmem_cap: Optional[int] = None) -> int:
-    """Smallest depth that hides `latency_s`, capped by VMEM and slot count.
+    """Smallest depth that hides the latency, capped by VMEM and slot count.
+
+    `machine` defaults to the active `core.machine` profile; `latency_s` /
+    `vmem_budget` / `slot_limit` default to that model's fields and override
+    them individually when given (the latency dial, a tighter budget).
 
     Hiding condition (paper §II insight, adapted): while one tile's DMA is in
     flight (latency + transfer), the other depth-1 slots must keep the
@@ -74,9 +84,14 @@ def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
     from the §III-B classification (private x depth, shared x 1) instead of
     the hand-filled profile byte counts.
     """
-    tc = max(tile_compute_s(p), 1e-12)
-    service = max(tc, tile_transfer_s(p))
-    need = math.ceil((latency_s + tile_transfer_s(p)) / service) + 1
+    m = machine or get_machine()
+    latency_s = m.hbm_latency_s if latency_s is None else latency_s
+    vmem_budget = m.vmem_bytes if vmem_budget is None else vmem_budget
+    slot_limit = m.request_slots if slot_limit is None else slot_limit
+    tc = max(tile_compute_s(p, machine=m), 1e-12)
+    tt = tile_transfer_s(p, machine=m)
+    service = max(tc, tt)
+    need = math.ceil((latency_s + tt) / service) + 1
     if vmem_cap is not None:
         cap = vmem_cap
     else:
@@ -86,35 +101,56 @@ def solve_depth(p: TileProfile, *, latency_s: float = HBM_LATENCY_S,
 
 
 def achieved_bandwidth(p: TileProfile, depth: int,
-                       *, latency_s: float = HBM_LATENCY_S) -> float:
+                       *, machine: Optional[MachineModel] = None,
+                       latency_s: Optional[float] = None) -> float:
     """Steady-state HBM bytes/s of the pipeline at a given depth.
 
     Each slot cycles through issue -> in-flight(latency+transfer) -> compute.
     With `depth` slots, a tile completes every
     max(t_compute, (latency + t_transfer + t_compute)/depth).
     """
-    tc = tile_compute_s(p)
-    tt = tile_transfer_s(p)
+    m = machine or get_machine()
+    latency_s = m.hbm_latency_s if latency_s is None else latency_s
+    tc = tile_compute_s(p, machine=m)
+    tt = tile_transfer_s(p, machine=m)
     period = max(tc, (latency_s + tt + tc) / depth, tt)
     return p.tile_bytes / period
 
 
 def adaptive_depth(p: TileProfile, latency_samples_s: Sequence[float],
                    *, quantile: float = 0.95,
-                   vmem_budget: int = VMEM_BYTES,
-                   slot_limit: int = REQUEST_SLOTS,
+                   machine: Optional[MachineModel] = None,
+                   vmem_budget: Optional[int] = None,
+                   slot_limit: Optional[int] = None,
                    vmem_cap: Optional[int] = None) -> int:
     """Dynamic-scheduler analogue: re-solve depth from observed latencies."""
     if not latency_samples_s:
-        return solve_depth(p, vmem_budget=vmem_budget, slot_limit=slot_limit,
-                           vmem_cap=vmem_cap)
+        return solve_depth(p, machine=machine, vmem_budget=vmem_budget,
+                           slot_limit=slot_limit, vmem_cap=vmem_cap)
     xs = sorted(latency_samples_s)
     q = xs[min(int(quantile * len(xs)), len(xs) - 1)]
-    return solve_depth(p, latency_s=q, vmem_budget=vmem_budget,
-                       slot_limit=slot_limit, vmem_cap=vmem_cap)
+    return solve_depth(p, machine=machine, latency_s=q,
+                       vmem_budget=vmem_budget, slot_limit=slot_limit,
+                       vmem_cap=vmem_cap)
 
 
 def static_prefetch_depth(p: TileProfile, *, latency_s: float,
+                          machine: Optional[MachineModel] = None,
                           mshr_limit: int = 16) -> int:
     """The baseline the paper improves on: prefetch distance capped by MSHRs."""
-    return min(solve_depth(p, latency_s=latency_s), mshr_limit)
+    return min(solve_depth(p, machine=machine, latency_s=latency_s),
+               mshr_limit)
+
+
+_MACHINE_ALIASES = ("PEAK_FLOPS", "HBM_BW", "HBM_LATENCY_S", "VMEM_BYTES",
+                    "REQUEST_SLOTS", "ICI_BW")
+
+
+def __getattr__(name: str):
+    # Legacy constants forward to the ACTIVE machine profile — the single
+    # definition is core.machine (ISSUE-6 acceptance criterion).
+    if name in _MACHINE_ALIASES:
+        from repro.core import machine as _machine
+
+        return getattr(_machine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -36,7 +36,14 @@ import dataclasses
 import math
 from typing import Dict, List
 
-GHZ = 3.0  # emulated target frequency (paper: 3GHz, 100ns-1us far memory)
+from repro.core.machine import machine_profile
+
+# The emulated NH-G SoC is a machine like any other: its clock and
+# far-memory bandwidth come from the shared `core.machine` profile table
+# (paper: 3GHz, 100ns-1us far memory) and are cross-checked against the
+# MicroArch calibration below in `calibration_check`.
+_NHG = machine_profile("nh-g")
+GHZ = _NHG.clock_ghz
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +65,27 @@ class MicroArch:
     prefetch_pollution: float = 0.012      # per-coroutine L1 conflict slope
 
 
-NH_G = MicroArch()
+NH_G = MicroArch(bw_bytes_per_cycle=_NHG.hbm_bw / (GHZ * 1e9))
 SKYLAKE = MicroArch(ipc=3.2, mshr=12, bw_bytes_per_cycle=32.0,
                     switch_cost_handwritten=24.0, switch_cost_compiler=10.0,
                     local_hit=30.0, prefetch_pollution=0.008)
+
+
+def calibration_check() -> None:
+    """Cross-check the MicroArch calibration against the shared `nh-g`
+    machine profile: the far-memory bandwidth the queueing model charges
+    (bytes/cycle x clock) must be the profile's `hbm_bw`, the sustained
+    instruction rate must be the profile's `peak_flops`, and the AMU's
+    effective in-flight window must fit the profile's request slots
+    (Fig. 16: MLP peaks ~64). Raises AssertionError on drift."""
+    bw = NH_G.bw_bytes_per_cycle * GHZ * 1e9
+    assert abs(bw - _NHG.hbm_bw) < 1e-6 * _NHG.hbm_bw, (bw, _NHG.hbm_bw)
+    ips = NH_G.ipc * GHZ * 1e9
+    assert abs(ips - _NHG.peak_flops) < 1e-6 * _NHG.peak_flops, (
+        ips, _NHG.peak_flops)
+    assert NH_G.amu_inflight <= _NHG.request_slots, (
+        NH_G.amu_inflight, _NHG.request_slots)
+    assert NH_G.mshr < _NHG.request_slots  # the paper's MSHR-vs-slots gap
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,22 +11,18 @@ from __future__ import annotations
 
 import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descriptors import GatherPlan, plan_gather
+from repro.core.machine import default_interpret
 from repro.kernels.coro_gather.coro_gather import row_gather, span_gather
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def coro_gather(table, idx, *, depth: int | None = None, rows_per_tile: int = 8,
                 interpret: bool | None = None):
     """Pipelined gather; pads the index stream to a tile multiple."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     n = idx.shape[0]
     pad = (-n) % rows_per_tile
     idx_p = jnp.pad(idx, (0, pad)) if pad else idx
@@ -45,7 +41,7 @@ def coalesced_gather(table, idx: np.ndarray, *, span: int = 8,
     its own depth when `depth` is None (span tiles and row tiles have
     different specs).
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     plan = plan_gather(np.asarray(idx), span=span)
     d = table.shape[1]
     parts = []

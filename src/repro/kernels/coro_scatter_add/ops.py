@@ -6,16 +6,12 @@ substrate's shared `StoreStream` path — declared in
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.descriptors import dedup_rmw
+from repro.core.machine import default_interpret
 from repro.kernels.coro_scatter_add.coro_scatter_add import scatter_add_unique
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def coro_scatter_add(table, idx, updates, *, depth: int | None = None,
@@ -27,7 +23,7 @@ def coro_scatter_add(table, idx, updates, *, depth: int | None = None,
     target the same row, so the RMW pipeline is race-free by construction.
     `idx` is host data (plan-time pass).
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     uniq, summed = dedup_rmw(np.asarray(idx), np.asarray(updates))
     n = uniq.shape[0]
     pad = (-n) % rows_per_tile

@@ -7,21 +7,16 @@ don't multiply by depth), adaptive once transfer samples are recorded.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.core.machine import default_interpret
 from repro.kernels.decode_attention.decode_attention import (
     flash_decode,
     paged_flash_decode,
 )
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def decode_attention(q, k_cache, v_cache, pos, *, blk: int = 128,
                      depth: int | None = None, interpret: bool | None = None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     return flash_decode(q, k_cache, v_cache, pos, blk=blk, depth=depth,
                         interpret=interpret)
 
@@ -32,6 +27,6 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     """Ragged-batch decode over a paged KV block pool (see
     `decode_attention.paged_flash_decode`). ``depth=None`` solves the
     pipeline depth from the page-tile `CoroSpec` via core.autotune."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     return paged_flash_decode(q, k_pool, v_pool, block_tables, lengths,
                               depth=depth, interpret=interpret)

@@ -6,16 +6,11 @@ cap taken from the classified context bytes.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.core.machine import default_interpret
 from repro.kernels.moe_gmm.moe_gmm import gmm
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def moe_gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
             interpret: bool | None = None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     return gmm(tokens, weights, f_tile=f_tile, depth=depth, interpret=interpret)

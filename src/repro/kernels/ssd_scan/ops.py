@@ -7,18 +7,13 @@ the budget once, not per slot.
 """
 from __future__ import annotations
 
-import jax
-
+from repro.core.machine import default_interpret
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def ssd(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
         interpret: bool | None = None):
     """Batched SSD. x:[b,s,nh,p] dt:[b,s,nh] A:[nh] B,C:[b,s,n]."""
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     return ssd_scan(x, dt, A, B, C, chunk=chunk, depth=depth,
                     interpret=interpret)

@@ -7,16 +7,11 @@ coro_scatter_add's RMW pipeline).
 """
 from __future__ import annotations
 
-import jax
-
+from repro.core.machine import default_interpret
 from repro.kernels.stream_copy.stream_copy import triad
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def stream_triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
                  interpret: bool | None = None):
-    interpret = (not _on_tpu()) if interpret is None else interpret
+    interpret = default_interpret() if interpret is None else interpret
     return triad(b, c, scalar, rows=rows, depth=depth, interpret=interpret)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import roofline
+from repro.core.machine import get_machine
 from repro.configs import (
     ALL_ARCH_NAMES,
     ALL_SHAPE_NAMES,
@@ -192,11 +193,16 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *, out_dir=None,
             "d6": {"flops": c6["flops"], "bytes": c6["bytes"]},
         }
 
-    t = roofline.terms(est["flops"], est["bytes"], est["collectives"])
+    # the roofline terms read the SAME machine model the depth solver uses
+    # (core.machine's active profile; dial with REPRO_MACHINE)
+    machine = get_machine()
+    t = roofline.terms(est["flops"], est["bytes"], est["collectives"],
+                       machine=machine)
     mflops = roofline.model_flops(cfg, shape, kind)
 
     rec.update(
         status="ok",
+        machine=machine.name,
         kind=kind,
         chips=int(n_chips),
         compile_s=round(full["t_compile"], 2),
@@ -205,7 +211,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *, out_dir=None,
         hlo_flops_per_chip=est["flops"],
         hlo_bytes_per_chip=est["bytes"],
         hbm_bytes_per_chip=est["hbm"],
-        memory_hbm_s=est["hbm"] / roofline.HBM_BW,
+        memory_hbm_s=est["hbm"] / machine.hbm_bw,
         collective_bytes=est["collectives"],
         terms=t,
         dominant=roofline.dominant(t),

@@ -25,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, token_split
+from repro.core import autotune
+from repro.core.machine import get_machine
 from repro.models import build_model
-from repro.serve.engine import percentile_ms
+from repro.serve.engine import latency_report
 from repro.sharding import NULL_CTX
 
 
@@ -65,7 +67,13 @@ def timed_decode_loop(decode, params, cache, tokens, *, steps, make_batch):
         logits, cache = decode(params, cache, make_batch(tokens, i))
         tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         jax.block_until_ready(tokens)
-        lat.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        lat.append(dt)
+        if autotune.telemetry_enabled():
+            # one "tile" per request token this step; the first observation
+            # (jit compile) is dropped by observe_pipeline's warmup skip
+            autotune.observe_pipeline("serve_dense_decode", dt,
+                                      int(tokens.shape[0]))
         out.append(tokens)
     return out, tokens, lat
 
@@ -108,13 +116,14 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     generated = jnp.concatenate(out, axis=1)
     stats = {
         "engine": "dense",
+        "machine": get_machine().name,
         "generated_shape": tuple(generated.shape),
         "prefill_s": round(t_prefill, 3),
         "decode_s": round(t_decode, 3),
         "decode_tok_per_s": round(batch * (gen - 1) / max(t_decode, 1e-9), 1),
         "sample_tokens": np.asarray(generated[0, :8]).tolist(),
     }
-    stats.update(percentile_ms(lat))
+    stats.update(latency_report(lat))
     return stats
 
 

@@ -68,7 +68,8 @@ def _expert_ffn(xs, wg, wu, wd, *, use_gmm: bool | None = None):
     the previous tile. The dense einsum below is the jnp twin, kept as the
     interpret-mode / CPU fallback (ROADMAP: MoE expert-parallel dispatch)."""
     if use_gmm is None:
-        use_gmm = jax.default_backend() == "tpu"
+        from repro.core.machine import default_interpret
+        use_gmm = not default_interpret()
     if use_gmm and _gmm_eligible(xs, wg, wu, wd):
         from repro.kernels.moe_gmm.ops import moe_gmm
         h = jax.nn.silu(moe_gmm(xs, wg.astype(xs.dtype), f_tile=GMM_F_TILE))

@@ -1,27 +1,27 @@
-"""Roofline accounting: hardware constants, analytic model FLOPs, HLO parsing.
+"""Roofline accounting: analytic model FLOPs, HLO parsing, machine terms.
 
-Hardware model (TPU v5e-class, per chip):
-  peak bf16 compute 197 TFLOP/s | HBM 819 GB/s | ICI ~50 GB/s per link.
+The hardware model is the active `core.machine` profile (one `MachineModel`
+definition shared with the depth solver — default TPU v5e-class: peak bf16
+compute 197 TFLOP/s | HBM 819 GB/s | ICI ~50 GB/s per link; dial with
+``REPRO_MACHINE``). The legacy names `PEAK_FLOPS`/`HBM_BW`/`ICI_BW` resolve
+to the active profile via module `__getattr__`.
 
 The three terms, per (arch x shape x mesh), all **per chip** (the compiled
 SPMD module is the per-device program, so cost_analysis is per-device):
 
-  compute    = HLO_FLOPs / PEAK_FLOPS
-  memory     = HLO_bytes / HBM_BW
-  collective = collective_bytes / ICI_BW
+  compute    = HLO_FLOPs / peak_flops
+  memory     = HLO_bytes / hbm_bw
+  collective = collective_bytes / ici_bw
 """
 from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeSuite, cache_seq_len, token_split
-
-PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
-HBM_BW = 819e9             # bytes/s per chip
-ICI_BW = 50e9              # bytes/s per link (formula: collective_bytes/(chips*link_bw))
+from repro.core.machine import MachineModel, get_machine
 
 # ------------------------------------------------------------ HLO parsing
 
@@ -198,14 +198,28 @@ def model_flops(cfg: ArchConfig, shape: ShapeSuite, kind: str) -> float:
 
 
 def terms(per_chip_flops: float, per_chip_bytes: float,
-          coll_bytes: Dict[str, int]) -> Dict[str, float]:
+          coll_bytes: Dict[str, int],
+          *, machine: Optional[MachineModel] = None) -> Dict[str, float]:
+    """Roofline terms under `machine` (default: the active profile — the
+    SAME model `core.schedule.solve_depth` hides latency against)."""
+    m = machine or get_machine()
     total_coll = float(sum(coll_bytes.values()))
     return {
-        "compute_s": per_chip_flops / PEAK_FLOPS,
-        "memory_s": per_chip_bytes / HBM_BW,
-        "collective_s": total_coll / ICI_BW,
+        "compute_s": per_chip_flops / m.peak_flops,
+        "memory_s": per_chip_bytes / m.hbm_bw,
+        "collective_s": total_coll / m.ici_bw if m.ici_bw else 0.0,
     }
 
 
 def dominant(t: Dict[str, float]) -> str:
     return max(("compute_s", "memory_s", "collective_s"), key=lambda k: t[k])
+
+
+def __getattr__(name: str):
+    # PEAK_FLOPS / HBM_BW / ICI_BW forward to the active machine profile —
+    # the single definition is core.machine (ISSUE-6 acceptance criterion).
+    if name in ("PEAK_FLOPS", "HBM_BW", "ICI_BW"):
+        from repro.core import machine as _machine
+
+        return getattr(_machine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -4,7 +4,7 @@
   scheduler   - admit/evict/preempt; rounds bounded by the autotuned depth
   engine      - prefill-then-decode loop with streaming completions
 """
-from repro.serve.engine import PagedServingEngine, percentile_ms
+from repro.serve.engine import PagedServingEngine, latency_report
 from repro.serve.kv_pager import GARBAGE_BLOCK, KVPager, PoolExhausted
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
@@ -20,5 +20,5 @@ __all__ = [
     "PoolExhausted",
     "Request",
     "RequestState",
-    "percentile_ms",
+    "latency_report",
 ]

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import autotune
+from repro.core.machine import get_machine
 from repro.kernels.decode_attention.decode_attention import paged_decode_spec
 from repro.models import build_model
 from repro.serve.kv_pager import KVPager
@@ -41,13 +42,16 @@ from repro.serve.scheduler import (
 from repro.sharding import NULL_CTX, ShardingCtx
 
 
-def percentile_ms(samples_s: List[float]) -> Dict[str, float]:
-    """p50/p99 of a latency sample list, in milliseconds."""
+def latency_report(samples_s: List[float]) -> Dict[str, float]:
+    """The one latency-stats dict every serving path reports: p50/p99/mean
+    of a per-token latency sample list, in milliseconds. Shared by the
+    paged engine (`stats`) and both engines in `launch.serve`."""
     if not samples_s:
-        return {"p50_ms": 0.0, "p99_ms": 0.0}
+        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
     arr = np.asarray(samples_s) * 1e3
     return {"p50_ms": round(float(np.percentile(arr, 50)), 3),
-            "p99_ms": round(float(np.percentile(arr, 99)), 3)}
+            "p99_ms": round(float(np.percentile(arr, 99)), 3),
+            "mean_ms": round(float(arr.mean()), 3)}
 
 
 class PagedServingEngine:
@@ -94,6 +98,7 @@ class PagedServingEngine:
         self._prefill_fns: Dict[int, Any] = {}  # jit cache keyed by padded len
         self._decode_fn = None                  # jit cache keyed by table width
         self._decode_fn_width = 0
+        self._decode_fresh = False
         self.rounds = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
@@ -176,6 +181,9 @@ class PagedServingEngine:
 
             self._decode_fn = jax.jit(step, donate_argnums=(1, 2))
             self._decode_fn_width = table_width
+            # the next round's wall clock includes jit compile: keep it out
+            # of the transfer-telemetry feedback store
+            self._decode_fresh = True
         return self._decode_fn
 
     def _table_width(self) -> int:
@@ -222,14 +230,26 @@ class PagedServingEngine:
             # the pre-write count (the new row's position)
             lengths[i] = self.pager.length(req.rid) - 1
 
+        decode = self._decode(tw)
         t0 = time.perf_counter()
-        nxt, self.k_pools, self.v_pools = self._decode(tw)(
+        nxt, self.k_pools, self.v_pools = decode(
             self.params, self.k_pools, self.v_pools,
             jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lengths))
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
         self.decode_s += dt
         self.rounds += 1
+
+        # always-on transfer telemetry (ISSUE-6): every decode round feeds
+        # the same (machine, kernel) store the paged kernel's pipeline does —
+        # wall clock over the KV page-tiles this round actually attended
+        if self._decode_fresh:
+            self._decode_fresh = False  # round paid jit compile; don't record
+        else:
+            tiles = sum(self.pager.blocks_for(int(n) + 1)
+                        for n in (lengths[i] for i in range(len(writable))))
+            if autotune.telemetry_enabled() and tiles:
+                autotune.record_transfer("paged_decode", dt / tiles)
 
         for i, req in enumerate(writable):
             req.kv_len = self.pager.length(req.rid)
@@ -261,6 +281,7 @@ class PagedServingEngine:
         pool_tokens = self.pager.pool_tokens
         out = {
             "engine": "paged",
+            "machine": get_machine().name,
             "requests": len(self._requests),
             "completed": len(self.finished),
             "rounds": self.rounds,
@@ -276,7 +297,7 @@ class PagedServingEngine:
             "decode_s": round(self.decode_s, 3),
             "decode_tok_per_s": round(decoded / max(self.decode_s, 1e-9), 1),
         }
-        out.update(percentile_ms(self.token_latencies_s))
+        out.update(latency_report(self.token_latencies_s))
         if self.finished:
             out["sample_tokens"] = self.finished[0].generated[:8]
         return out

@@ -13,3 +13,18 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_machine_and_autotune():
+    """Isolate tests from each other's feedback state: clear autotune samples
+    and re-resolve the machine profile from the environment (tests that call
+    set_machine(...) or record_transfer(...) must not leak into neighbours)."""
+    from repro.core import autotune
+    from repro.core.machine import set_machine
+
+    autotune.clear_samples()
+    set_machine(None)
+    yield
+    autotune.clear_samples()
+    set_machine(None)
