@@ -25,7 +25,9 @@ echo "== fast lane: python -m pytest -q -m 'not slow' =="
 python -m pytest -q -m "not slow"
 
 echo "== paged-serving smoke: examples/serve_batched.py --engine paged =="
-python examples/serve_batched.py --engine paged
+echo "   (includes the prefix smoke: shared system prompt must hit the"
+echo "    prefix cache and pop strictly fewer pool blocks than cache-off)"
+python examples/serve_batched.py --engine paged --prefix-cache
 
 echo "== machine smoke: far-memory profile must solve strictly deeper =="
 near_json="$(python scripts/machine_smoke.py)"

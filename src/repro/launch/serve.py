@@ -81,7 +81,8 @@ def timed_decode_loop(decode, params, cache, tokens, *, steps, make_batch):
 def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
           greedy: bool = True, ctx=NULL_CTX, layout: str = "default",
           engine: str = "dense", block_size: int = 16,
-          num_blocks: int | None = None):
+          num_blocks: int | None = None, prefix_cache: bool = True,
+          prefill_chunk: int = 32):
     if layout == "serving":
         from repro.runtime.layouts import serving_config_overrides
         cfg = cfg.replace(**serving_config_overrides())
@@ -89,7 +90,8 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     if engine == "paged":
         return serve_paged(cfg, batch=batch, prompt_len=prompt_len, gen=gen,
                            seed=seed, ctx=ctx, block_size=block_size,
-                           num_blocks=num_blocks)
+                           num_blocks=num_blocks, prefix_cache=prefix_cache,
+                           prefill_chunk=prefill_chunk)
     model = build_model(cfg, ctx)
     params = model.init(jax.random.PRNGKey(seed))
     rng = np.random.default_rng(seed)
@@ -129,9 +131,12 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
 
 def serve_paged(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
                 ctx=NULL_CTX, block_size: int = 16,
-                num_blocks: int | None = None):
+                num_blocks: int | None = None, prefix_cache: bool = True,
+                prefill_chunk: int = 32):
     """Continuous batching: `batch` requests with ragged prompt lengths
-    (4x spread) through a block pool sized to force page reuse."""
+    (4x spread) through a block pool sized to force page reuse. Half the
+    requests share a system-prompt prefix so the prefix cache (when on) has
+    something to dedup."""
     from repro.serve import PagedServingEngine
 
     rng = np.random.default_rng(seed)
@@ -145,10 +150,16 @@ def serve_paged(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
         # pages for later admissions (the continuous-batching regime)
         num_blocks = blocks_per_req * max(2, (batch + 1) // 2)
 
+    system = rng.integers(0, cfg.vocab, max(lo // 2, 1))
     eng = PagedServingEngine(cfg, ctx, block_size=block_size,
-                             num_blocks=num_blocks, seed=seed)
-    for plen in plens:
-        eng.submit(rng.integers(0, cfg.vocab, plen), max_new_tokens=gen)
+                             num_blocks=num_blocks, seed=seed,
+                             prefix_cache=prefix_cache,
+                             prefill_chunk=prefill_chunk)
+    for i, plen in enumerate(plens):
+        body = rng.integers(0, cfg.vocab, plen)
+        if i % 2 == 0:  # every other request opens with the system prompt
+            body[: len(system)] = system[: plen]
+        eng.submit(body, max_new_tokens=gen)
     stats = eng.run()
     stats["prompt_lens"] = plens
     return stats
@@ -165,6 +176,12 @@ def main(argv=None):
     ap.add_argument("--engine", default="dense", choices=["dense", "paged"])
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--prefix-cache", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="share KV pages across common prompt prefixes "
+                         "(paged engine; --no-prefix-cache disables)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="tokens per chunked-prefill step (paged engine)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -172,7 +189,9 @@ def main(argv=None):
         cfg = cfg.reduced()
     stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                   gen=args.gen, layout=args.layout, engine=args.engine,
-                  block_size=args.block_size, num_blocks=args.num_blocks)
+                  block_size=args.block_size, num_blocks=args.num_blocks,
+                  prefix_cache=args.prefix_cache,
+                  prefill_chunk=args.prefill_chunk)
     print(json.dumps(stats))
     return stats
 

@@ -333,6 +333,59 @@ def paged_cache_append(k_pool, v_pool, block_tables, lengths, new_k, new_v):
     return k_pool, v_pool
 
 
+def paged_cache_append_chunk(k_pool, v_pool, block_tables, start, new_k, new_v,
+                             n_valid):
+    """Write a chunk of consecutive KV rows into paged blocks.
+
+    The chunked-prefill analogue of `paged_cache_append`: rows
+    ``i < n_valid`` of the (right-padded) chunk land at logical positions
+    ``start + i`` through the block table; padding rows are redirected to
+    the reserved garbage block 0 so they never clobber real pages.
+
+    k_pool/v_pool: [NB, blk, KH, D]; block_tables: [B, M] int32; start/
+    n_valid: [] int32 (one request per call — chunks are per-request);
+    new_k/new_v: [B, C, KH, D].
+    """
+    b, c = new_k.shape[0], new_k.shape[1]
+    blk = k_pool.shape[1]
+    m = block_tables.shape[1]
+    idx = jnp.arange(c, dtype=jnp.int32)
+    pos = start + idx                                   # [C] absolute positions
+    bi = jnp.minimum(pos // blk, m - 1)
+    bids = block_tables[:, bi]                          # [B, C]
+    valid = (idx < n_valid) & (pos // blk < m)
+    bids = jnp.where(valid[None, :], bids, 0)           # padding -> garbage
+    offs = jnp.broadcast_to(pos % blk, (b, c))
+    k_pool = k_pool.at[bids, offs].set(new_k.astype(k_pool.dtype))
+    v_pool = v_pool.at[bids, offs].set(new_v.astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_prefill_attention(q, k_pool, v_pool, block_tables, q_pos):
+    """Causal chunk attention against a paged KV cache (chunked prefill).
+
+    q: [B, C, H, D] — a chunk of prompt queries at absolute positions
+    `q_pos` [B, C]; k_pool/v_pool: [NB, blk, KH, D]; block_tables: [B, M]
+    int32 (padded with the garbage block 0). Query i attends every pool
+    position <= q_pos[b, i] — its own chunk's rows were appended first
+    (`paged_cache_append_chunk`), earlier rows hold the already-prefilled
+    (or prefix-cache-shared) prefix. Returns [B, C, H, D]; padded query
+    rows produce garbage the caller discards.
+    """
+    b, c, h, d = q.shape
+    blk, kh = k_pool.shape[1], k_pool.shape[2]
+    m = block_tables.shape[1]
+    k = k_pool[block_tables].reshape(b, m * blk, kh, d)
+    v = v_pool[block_tables].reshape(b, m * blk, kh, d)
+    qg = _group(q, kh) * (d ** -0.5)                   # [B,C,KH,G,D]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32)
+    valid = jnp.arange(m * blk)[None, None, :] <= q_pos[:, :, None]  # [B,C,S]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(b, c, h, d)
+
+
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths):
     """Decode attention over a paged KV cache (jnp twin of the Pallas
     `kernels/decode_attention.paged_flash_decode`).

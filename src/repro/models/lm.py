@@ -27,7 +27,9 @@ from repro.models.common import (
     decode_attention,
     embed_lookup,
     paged_cache_append,
+    paged_cache_append_chunk,
     paged_decode_attention,
+    paged_prefill_attention,
     rms_norm,
     sinusoid_pos_emb,
     swiglu,
@@ -377,16 +379,7 @@ def paged_block_decode(p, x, k_pool, v_pool, cfg: ArchConfig, ctx: ShardingCtx,
     attn_o, k_pool, v_pool = paged_attn_decode(
         p["attn"], x, k_pool, v_pool, cfg,
         block_tables=block_tables, lengths=lengths)
-    x = x + attn_o
-    if cfg.moe:
-        h = rms_norm(x, p["moe_ln"], cfg.norm_eps)
-        moe_o, _ = moe_layer(p["moe"], h, cfg, ctx)
-        x = x + moe_o
-    elif "mlp" in p:
-        m = p["mlp"]
-        h = rms_norm(x, m["ln"], cfg.norm_eps)
-        x = x + swiglu(h, m["w_gate"].astype(h.dtype), m["w_up"].astype(h.dtype),
-                       m["w_down"].astype(h.dtype))
+    x = _paged_ffn(p, x + attn_o, cfg, ctx)
     return x, k_pool, v_pool
 
 
@@ -395,10 +388,65 @@ def run_layers_decode_paged(layers, k_pools, v_pools, x, cfg: ArchConfig,
     """All layers over per-layer pools [L, NB, blk, KH, D]. Returns
     (x, k_pools, v_pools)."""
 
+    def block_fn(lp, x, kp, vp):
+        return paged_block_decode(lp, x, kp, vp, cfg, ctx,
+                                  block_tables=block_tables, lengths=lengths)
+
+    return _run_layers_paged(layers, k_pools, v_pools, x, cfg, block_fn)
+
+
+def paged_attn_prefill_chunk(p, x, k_pool, v_pool, cfg: ArchConfig, *,
+                             block_tables, start, n_valid):
+    """Chunk attention against one layer's paged KV pool (chunked prefill).
+
+    x: [1, C, d] — a chunk of prompt hidden states at absolute positions
+    ``start + i``; the chunk's KV rows are appended into the pool first
+    (padding rows masked to the garbage page), then every query attends
+    causally over all pool positions <= its own. Returns
+    (attn_out, k_pool, v_pool).
+    """
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, h, cfg)
+    c = x.shape[1]
+    pos = (start + jnp.arange(c, dtype=jnp.int32))[None]  # [1, C]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    k_pool, v_pool = paged_cache_append_chunk(k_pool, v_pool, block_tables,
+                                              start, k, v, n_valid)
+    o = paged_prefill_attention(q, k_pool, v_pool, block_tables, pos)
+    return _attn_out(p, o, cfg), k_pool, v_pool
+
+
+def _paged_ffn(p, x, cfg: ArchConfig, ctx: ShardingCtx):
+    """The post-attention half every paged block shares (MoE or SwiGLU)."""
+    if cfg.moe:
+        h = rms_norm(x, p["moe_ln"], cfg.norm_eps)
+        moe_o, _ = moe_layer(p["moe"], h, cfg, ctx)
+        return x + moe_o
+    if "mlp" in p:
+        m = p["mlp"]
+        h = rms_norm(x, m["ln"], cfg.norm_eps)
+        x = x + swiglu(h, m["w_gate"].astype(h.dtype), m["w_up"].astype(h.dtype),
+                       m["w_down"].astype(h.dtype))
+    return x
+
+
+def paged_block_prefill_chunk(p, x, k_pool, v_pool, cfg: ArchConfig,
+                              ctx: ShardingCtx, *, block_tables, start, n_valid):
+    """One layer, one prefill chunk, paged KV. Returns (x, k_pool, v_pool)."""
+    attn_o, k_pool, v_pool = paged_attn_prefill_chunk(
+        p["attn"], x, k_pool, v_pool, cfg,
+        block_tables=block_tables, start=start, n_valid=n_valid)
+    x = _paged_ffn(p, x + attn_o, cfg, ctx)
+    return x, k_pool, v_pool
+
+
+def _run_layers_paged(layers, k_pools, v_pools, x, cfg: ArchConfig, block_fn):
+    """Scan (or unroll) `block_fn` over layers + per-layer pools."""
+
     def body(x, inp):
         lp, kp, vp = inp
-        y, kp, vp = paged_block_decode(lp, x, kp, vp, cfg, ctx,
-                                       block_tables=block_tables, lengths=lengths)
+        y, kp, vp = block_fn(lp, x, kp, vp)
         return y, (kp, vp)
 
     if cfg.scan_layers:
@@ -413,6 +461,38 @@ def run_layers_decode_paged(layers, k_pools, v_pools, x, cfg: ArchConfig,
         kps.append(kp)
         vps.append(vp)
     return x, jnp.stack(kps), jnp.stack(vps)
+
+
+def prefill_chunk_paged(params, k_pools, v_pools, block_tables, start, batch,
+                        n_valid, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX):
+    """One chunk of a request's prefill through the paged pipeline.
+
+    batch["tokens"]: [1, C] right-padded chunk; start: [] int32 absolute
+    position of its first token; n_valid: [] int32 real tokens (the rest is
+    padding whose KV writes are masked to the garbage page). The request's
+    block table must already map every position < start + n_valid — shared
+    prefix pages for positions < start (prefix-cache hit), private pages
+    for the chunk itself (copy-on-write forked by the pager if the first
+    page is shared). Returns (last_logits [1, V] at the chunk's final real
+    token, k_pools, v_pools).
+    """
+    if not supports_paged_decode(cfg):
+        raise ValueError(f"paged prefill unsupported for family {cfg.family!r} "
+                         f"(sliding_window={cfg.sliding_window})")
+    dt = jnp.dtype(cfg.dtype)
+    x = embed_lookup(params["embed"], batch["tokens"]).astype(dt)
+
+    def block_fn(lp, x, kp, vp):
+        return paged_block_prefill_chunk(lp, x, kp, vp, cfg, ctx,
+                                         block_tables=block_tables,
+                                         start=start, n_valid=n_valid)
+
+    x, k_pools, v_pools = _run_layers_paged(params["layers"], k_pools, v_pools,
+                                            x, cfg, block_fn)
+    last = jax.lax.dynamic_slice_in_dim(x, n_valid - 1, 1, axis=1)  # [1,1,d]
+    last = rms_norm(last, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, last, cfg, ctx)[:, 0]
+    return logits, k_pools, v_pools
 
 
 def supports_paged_decode(cfg: ArchConfig) -> bool:

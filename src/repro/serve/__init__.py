@@ -1,11 +1,15 @@
 """Paged-KV continuous-batching serving on the coroutine substrate.
 
-  kv_pager    - HBM block pool + per-request block tables (host bookkeeping)
-  scheduler   - admit/evict/preempt; rounds bounded by the autotuned depth
-  engine      - prefill-then-decode loop with streaming completions
+  kv_pager     - HBM block pool + refcounted tables, copy-on-write forks
+  prefix_cache - radix index: shared prompt prefixes -> shared KV pages
+  prefill      - chunked prefill through the paged pipeline (pow2 jit cache)
+  scheduler    - admit/evict/preempt; budgeted rounds mixing decode + chunks
+  engine       - the serving loop wiring them together, streaming completions
 """
 from repro.serve.engine import PagedServingEngine, latency_report
 from repro.serve.kv_pager import GARBAGE_BLOCK, KVPager, PoolExhausted
+from repro.serve.prefill import ChunkedPrefiller, bucket_len
+from repro.serve.prefix_cache import MISS, PrefixCache, PrefixMatch
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -13,12 +17,17 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
+    "ChunkedPrefiller",
     "ContinuousBatchingScheduler",
     "GARBAGE_BLOCK",
     "KVPager",
+    "MISS",
     "PagedServingEngine",
     "PoolExhausted",
+    "PrefixCache",
+    "PrefixMatch",
     "Request",
     "RequestState",
+    "bucket_len",
     "latency_report",
 ]

@@ -1,13 +1,23 @@
 """Paged-KV continuous-batching serving engine on the coroutine substrate.
 
-Drives prefill-then-decode over the block pool: every round the scheduler
-admits what fits, each admitted request is prefilled (its prompt KV is
-scattered into its pages), and all running requests decode one token
-through a single jitted `models.lm.decode_step_paged` — per-request ragged
-positions, one fixed round width, pools donated so the cache updates in
-place. The round width is the pipeline depth `core.autotune` solves for the
-paged decode `CoroSpec`: the scheduler keeps as many request-coroutines in
-flight as the tuned pipeline keeps page-tiles in flight.
+Every round the scheduler plans work under a token budget: all running
+requests decode one token through a single jitted
+`models.lm.decode_step_paged` (per-request ragged positions, one fixed round
+width, pools donated so the cache updates in place), and the leftover budget
+drives **chunked prefill** — admitted prompts trickle through
+`models.lm.prefill_chunk_paged` a fixed-size chunk at a time, writing KV
+directly into their pages instead of the old dense-prefill-then-scatter.
+The round width is the pipeline depth `core.autotune` solves for the paged
+decode `CoroSpec`: the scheduler keeps as many request-coroutines in flight
+as the tuned pipeline keeps page-tiles in flight.
+
+Shared prompt prefixes dedup through the radix **prefix cache**
+(`serve/prefix_cache.py`): admission looks the prompt up, already-resident
+pages are refcounted into the new request's table, and only the suffix is
+prefilled. Pages a request would write mid-block are copy-on-write forked
+first (`KVPager.ensure_writable` + a physical page copy here). Under pool
+pressure the engine reclaims least-recently-hit cache-only pages before the
+scheduler resorts to preemption.
 
 The decode math runs through the jnp twin (`models.common`), which jits on
 any backend; `kernels/decode_attention.paged_flash_decode` is the TPU
@@ -22,7 +32,7 @@ ratio.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, FrozenSet, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +44,8 @@ from repro.core.machine import get_machine
 from repro.kernels.decode_attention.decode_attention import paged_decode_spec
 from repro.models import build_model
 from repro.serve.kv_pager import KVPager
+from repro.serve.prefill import ChunkedPrefiller
+from repro.serve.prefix_cache import MISS, PrefixCache, PrefixMatch
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -60,9 +72,14 @@ class PagedServingEngine:
     def __init__(self, cfg: ArchConfig, ctx: ShardingCtx = NULL_CTX, *,
                  block_size: int = 16, num_blocks: int = 64,
                  max_in_flight: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 prefill_chunk: int = 32,
+                 token_budget: Optional[int] = None,
                  params: Optional[Any] = None, seed: int = 0,
                  on_token: Optional[Callable[[Request, int], None]] = None,
                  on_finish: Optional[Callable[[Request], None]] = None):
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cfg = cfg
         self.ctx = ctx
         self.model = build_model(cfg, ctx)
@@ -74,6 +91,8 @@ class PagedServingEngine:
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed)))
         self.pager = KVPager(num_blocks, block_size)
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(self.pager) if prefix_cache else None)
         kh, hd, g = cfg.kv_heads, cfg.resolved_head_dim, cfg.n_heads // cfg.kv_heads
 
         # scheduler <-> autotune coupling: in-flight requests per round =
@@ -85,7 +104,16 @@ class PagedServingEngine:
         # a round can't usefully exceed one block-owning request per block
         self.round_width = int(max_in_flight
                                or min(max(2, self.solved_depth), num_blocks))
-        self.scheduler = ContinuousBatchingScheduler(self.pager, self.round_width)
+        self.prefill_chunk = int(prefill_chunk)
+        # budget: every running request decodes, plus one chunk's worth of
+        # prefill trickles alongside — decode is never starved, prefill
+        # never stalls a round for a whole prompt
+        self.token_budget = int(token_budget
+                                or self.round_width + self.prefill_chunk)
+        self.scheduler = ContinuousBatchingScheduler(
+            self.pager, self.round_width,
+            token_budget=self.token_budget, reclaim=self._reclaim)
+        self.prefiller = ChunkedPrefiller(self.model, block_size)
 
         shape = (cfg.n_layers, self.pager.physical_blocks, block_size, kh, hd)
         self.k_pools = jnp.zeros(shape, jnp.dtype(cfg.dtype))
@@ -95,14 +123,18 @@ class PagedServingEngine:
         self.on_finish = on_finish
         self._requests: Dict[int, Request] = {}
         self._next_rid = 0
-        self._prefill_fns: Dict[int, Any] = {}  # jit cache keyed by padded len
         self._decode_fn = None                  # jit cache keyed by table width
         self._decode_fn_width = 0
         self._decode_fresh = False
         self.rounds = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        self.prefix_hits = 0
+        self.prefix_tokens = 0
+        self.blocks_shared = 0
+        self.cow_forks = 0
         self.token_latencies_s: List[float] = []
+        self.tbt_s: List[float] = []            # inter-token gaps (fairness)
         self.finished: List[Request] = []
 
     # -------------------------------------------------------------- intake
@@ -121,6 +153,7 @@ class PagedServingEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens))
+        req.submit_s = time.perf_counter()
         self._requests[rid] = req
         self.scheduler.submit(req)
         return rid
@@ -128,41 +161,80 @@ class PagedServingEngine:
     def request(self, rid: int) -> Request:
         return self._requests[rid]
 
+    # ------------------------------------------------------ prefix plumbing
+
+    @property
+    def _prefill_fns(self) -> Dict[Any, Any]:
+        """The chunk-step jit cache — bounded by pow2 length bucketing
+        (tests assert its size stays logarithmic in prompt length)."""
+        return self.prefiller._fns
+
+    def _match(self, tokens) -> PrefixMatch:
+        if self.prefix_cache is None:
+            return MISS
+        return self.prefix_cache.match(tokens)
+
+    def _reclaim(self, n_blocks: int, protect: FrozenSet[int]) -> int:
+        """Scheduler pressure hook: drop LRU cache-only pages."""
+        if self.prefix_cache is None:
+            return 0
+        return len(self.prefix_cache.evict(n_blocks, protect))
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Materialise a copy-on-write fork in the physical pools."""
+        self.k_pools = self.k_pools.at[:, dst].set(self.k_pools[:, src])
+        self.v_pools = self.v_pools.at[:, dst].set(self.v_pools[:, src])
+        self.cow_forks += 1
+
+    def _make_writable(self, req: Request, pos: int) -> None:
+        copy = self.scheduler.make_writable(req, pos)
+        if copy is not None:
+            self._copy_page(*copy)
+
     # ------------------------------------------------------------- prefill
 
-    def _prefill_fn(self, padded: int):
-        fn = self._prefill_fns.get(padded)
-        if fn is None:
-            fn = jax.jit(lambda p, b: self.model.prefill(p, b, pad_to=padded))
-            self._prefill_fns[padded] = fn
-        return fn
-
-    def _prefill(self, req: Request) -> None:
-        """Run the prompt (context) through the model and scatter its KV
-        into the request's pages; sample the first new token."""
-        ctx_tokens = req.context
-        n = len(ctx_tokens)
-        blk = self.pager.block_size
-        padded = self.pager.blocks_for(n) * blk
-        batch = {"tokens": jnp.asarray([ctx_tokens], jnp.int32),
-                 "positions": jnp.arange(n, dtype=jnp.int32)[None]}
+    def _prefill_chunk_step(self, req: Request, n: int) -> None:
+        """Run one `n`-token chunk of `req`'s prefill; on the last chunk,
+        emit the first generated token and promote (or finish)."""
+        ctxt = req.context
+        start = req.prefill_pos
+        n = min(n, len(ctxt) - start)
+        if n <= 0:
+            return
+        # the chunk's first page may be shared (a partial-block prefix hit):
+        # fork it before writing rows into it
+        self._make_writable(req, start)
+        if req.state is not RequestState.PREFILL:
+            return  # the fork's pressure resolution preempted this request
+        tw = self._table_width()
+        table = self.pager.padded_table(req.rid, tw)
         t0 = time.perf_counter()
-        cache, logits = self._prefill_fn(padded)(self.params, batch)
-        k = cache["layers"]["k"]  # [L, 1, padded, KH, D]
-        v = cache["layers"]["v"]
-        L, _, s_pad, kh, hd = k.shape
-        nb = s_pad // blk
-        bids = jnp.asarray(self.pager.block_table(req.rid)[:nb], jnp.int32)
-        self.k_pools = self.k_pools.at[:, bids].set(
-            k.reshape(L, nb, blk, kh, hd).astype(self.k_pools.dtype))
-        self.v_pools = self.v_pools.at[:, bids].set(
-            v.reshape(L, nb, blk, kh, hd).astype(self.v_pools.dtype))
-        first = int(jnp.argmax(logits[0, -1]))
-        jax.block_until_ready(self.k_pools)
+        logits, self.k_pools, self.v_pools, _ = self.prefiller.run_chunk(
+            self.params, self.k_pools, self.v_pools,
+            ctxt[start:start + n], table, start, n)
         self.prefill_s += time.perf_counter() - t0
-        self._emit(req, first)
+        req.prefill_pos = start + n
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(ctxt[:req.prefill_pos],
+                                     self.pager.block_table(req.rid))
+        if req.prefill_pos >= len(ctxt):
+            first = int(jnp.argmax(logits[0]))
+            self._emit(req, first)
+            if req.done:  # max_new_tokens == 1: satisfied by this token
+                self.scheduler.finish(req)
+                self.finished.append(req)
+                if self.on_finish:
+                    self.on_finish(req)
+            else:
+                self.scheduler.promote(req)
 
     def _emit(self, req: Request, token: int) -> None:
+        now = time.perf_counter()
+        if req.first_token_s is None:
+            req.first_token_s = now
+        elif req.last_emit_s is not None:
+            self.tbt_s.append(now - req.last_emit_s)
+        req.last_emit_s = now
         req.generated.append(token)
         if self.on_token:
             self.on_token(req, token)
@@ -194,25 +266,18 @@ class PagedServingEngine:
                     for r in self._requests.values()), default=1)
         return max(need, 1)
 
-    def step_round(self) -> int:
-        """One scheduler round: admit + prefill, then decode one token for
-        every running request. Returns tokens emitted this round."""
-        for req in self.scheduler.admit():
-            self._prefill(req)
-            if req.done:  # max_new_tokens == 1: satisfied by the prefill token
-                self.scheduler.finish(req)
-                self.finished.append(req)
-                if self.on_finish:
-                    self.on_finish(req)
-
-        active = [r for r in self.scheduler.round()]
+    def _decode_round(self, active: List[Request]) -> int:
+        """Decode one token for every (still-)running request in `active`."""
         # reserve pool room for each request's next token; reserving may
-        # preempt later-admitted members of this same round
+        # preempt later-admitted members of this same round, and writing
+        # mid-block may copy-on-write fork a page the prefix cache shares
         writable: List[Request] = []
         for req in active:
             if req.state is not RequestState.RUNNING:
                 continue  # preempted by an earlier reservation
-            self.scheduler.reserve_decode_slot(req)
+            pos = self.scheduler.reserve_decode_slot(req)
+            if req.state is RequestState.RUNNING:
+                self._make_writable(req, pos)
             writable.append(req)
         writable = [r for r in writable if r.state is RequestState.RUNNING]
         if not writable:
@@ -238,7 +303,6 @@ class PagedServingEngine:
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
         self.decode_s += dt
-        self.rounds += 1
 
         # always-on transfer telemetry (ISSUE-6): every decode round feeds
         # the same (machine, kernel) store the paged kernel's pipeline does —
@@ -262,6 +326,29 @@ class PagedServingEngine:
                     self.on_finish(req)
         return len(writable)
 
+    # --------------------------------------------------------------- round
+
+    def step_round(self) -> int:
+        """One budgeted scheduler round: admit (with prefix lookup), decode
+        one token for every running request, then spend the leftover budget
+        on prefill chunks. Returns tokens emitted this round."""
+        for req in self.scheduler.admit(match=self._match):
+            if req.matched_len > 0:
+                self.prefix_hits += 1
+                self.prefix_tokens += req.matched_len
+                self.blocks_shared += self.pager.blocks_for(req.matched_len)
+
+        decodes, plans = self.scheduler.plan_round(self.prefill_chunk)
+        emitted = self._decode_round(decodes)
+        for req, n in plans:
+            if req.state is not RequestState.PREFILL:
+                continue  # preempted resolving an earlier request's pressure
+            before = len(req.generated)
+            self._prefill_chunk_step(req, n)
+            emitted += len(req.generated) - before
+        self.rounds += 1
+        return emitted
+
     # ----------------------------------------------------------------- run
 
     def run(self, max_rounds: int = 100_000) -> Dict[str, Any]:
@@ -272,13 +359,15 @@ class PagedServingEngine:
                 raise RuntimeError(f"no convergence in {max_rounds} rounds")
             self.step_round()
             rounds += 1
-        self.pager.check_invariants()
+        self.pager.check_invariants(
+            self.prefix_cache.block_refs() if self.prefix_cache else None)
         return self.stats()
 
     def stats(self) -> Dict[str, Any]:
         decoded = len(self.token_latencies_s)
         agg_kv = sum(len(r.prompt) + len(r.generated) for r in self.finished)
         pool_tokens = self.pager.pool_tokens
+        ttft = [r.ttft_s for r in self.finished if r.ttft_s is not None]
         out = {
             "engine": "paged",
             "machine": get_machine().name,
@@ -288,14 +377,31 @@ class PagedServingEngine:
             "preemptions": self.scheduler.preemptions,
             "round_width": self.round_width,
             "solved_depth": self.solved_depth,
+            "token_budget": self.token_budget,
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_chunks": self.prefiller.chunks_run,
             "block_size": self.pager.block_size,
             "num_blocks": self.pager.num_blocks,
             "pool_tokens": pool_tokens,
+            "blocks_allocated": self.pager.blocks_allocated,
             "aggregate_kv_tokens": agg_kv,
             "kv_oversubscription": round(agg_kv / max(pool_tokens, 1), 2),
+            "prefix_cache": self.prefix_cache is not None,
+            "prefix_hits": self.prefix_hits,
+            "prefix_tokens": self.prefix_tokens,
+            "blocks_shared": self.blocks_shared,
+            "cow_forks": self.cow_forks,
+            "cache_blocks": (len(self.prefix_cache)
+                             if self.prefix_cache else 0),
+            "cache_evictions": (self.prefix_cache.evictions
+                                if self.prefix_cache else 0),
             "prefill_s": round(self.prefill_s, 3),
             "decode_s": round(self.decode_s, 3),
             "decode_tok_per_s": round(decoded / max(self.decode_s, 1e-9), 1),
+            "ttft_p50_ms": latency_report(ttft)["p50_ms"],
+            "ttft_p99_ms": latency_report(ttft)["p99_ms"],
+            "tbt_p50_ms": latency_report(self.tbt_s)["p50_ms"],
+            "tbt_p99_ms": latency_report(self.tbt_s)["p99_ms"],
         }
         out.update(latency_report(self.token_latencies_s))
         if self.finished:

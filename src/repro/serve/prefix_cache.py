@@ -1,0 +1,204 @@
+"""Radix-tree prefix index: shared prompt prefixes map onto shared KV pages.
+
+The serving engine re-fetches (and re-computes) KV for prompt prefixes that
+many requests share — system prompts, few-shot headers. This module
+deduplicates them at page granularity: a radix tree keyed by full
+token-blocks maps a prompt prefix onto the physical pages already holding
+its KV. Because KV rows are position-dependent and every shared prefix
+starts at position 0, a page can be reused verbatim by any request whose
+prompt starts with the same tokens.
+
+Tree shape: one node per cached page; the edge into a node is the exact
+`block_size`-token tuple that page stores, so a root-to-node path spells a
+block-aligned token prefix. Matching walks full blocks, then takes the
+longest common prefix *within* the first diverging block — the partially
+matched page is shared too, and the requester copy-on-write forks it
+(`KVPager.ensure_writable`) before writing its own suffix rows mid-block.
+
+Lifecycle: `insert` takes one pager reference per cached page (so pages
+survive their owning request), `match` only reads, `evict` drops
+least-recently-hit leaf pages whose sole remaining reference is the cache —
+the engine calls it under pool pressure before resorting to preemption.
+
+A match never covers a whole prompt: at least one token is always left to
+prefill so the engine has logits to sample the first output token from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.serve.kv_pager import KVPager
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """A prefix-cache lookup result: `blocks` shared pages covering the
+    first `n_tokens` prompt tokens (the last page possibly only partially —
+    ``n_tokens % block_size`` rows valid)."""
+
+    blocks: List[int]
+    n_tokens: int
+
+    @property
+    def hit(self) -> bool:
+        return self.n_tokens > 0
+
+
+MISS = PrefixMatch([], 0)
+
+
+class _Node:
+    __slots__ = ("tokens", "block", "parent", "children", "last_hit")
+
+    def __init__(self, tokens: Tuple[int, ...], block: int,
+                 parent: Optional["_Node"]):
+        self.tokens = tokens
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.last_hit = 0
+
+
+class PrefixCache:
+    """Radix index over the block pool; holds one pager ref per cached page."""
+
+    def __init__(self, pager: KVPager):
+        self.pager = pager
+        self.block_size = pager.block_size
+        self._children: Dict[Tuple[int, ...], _Node] = {}  # root level
+        self._by_block: Dict[int, _Node] = {}
+        self._clock = 0
+        self.lookups = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # -------------------------------------------------------------- match
+
+    def match(self, tokens: Sequence[int]) -> PrefixMatch:
+        """Longest cached prefix of `tokens`, capped at ``len(tokens) - 1``
+        so the requester always prefills (and gets logits for) at least one
+        token. Takes no references — `KVPager.alloc(prefix_blocks=...)`
+        does, immediately after, under the same engine step."""
+        self.lookups += 1
+        toks = [int(t) for t in tokens]
+        blk = self.block_size
+        now = self._tick()
+        blocks: List[int] = []
+        covered = 0
+        children = self._children
+        while True:
+            key = tuple(toks[covered:covered + blk])
+            node = children.get(key) if len(key) == blk else None
+            if node is not None:  # whole block matches: descend
+                node.last_hit = now
+                blocks.append(node.block)
+                covered += blk
+                children = node.children
+                continue
+            # divergence: share the child page with the longest common
+            # prefix inside this block (COW-forked by the requester before
+            # it writes its own rows there)
+            rest = toks[covered:]
+            best, best_n = None, 0
+            for child in children.values():
+                n = _lcp(child.tokens, rest)
+                if n > best_n:
+                    best, best_n = child, n
+            if best is not None:
+                best.last_hit = now
+                blocks.append(best.block)
+                covered += best_n
+            break
+        if covered >= len(toks):
+            covered = len(toks) - 1
+        while blocks and covered <= (len(blocks) - 1) * blk:
+            blocks.pop()  # capping dropped the tail page entirely
+        if covered <= 0:
+            return MISS
+        return PrefixMatch(blocks, covered)
+
+    # ------------------------------------------------------------- insert
+
+    def insert(self, tokens: Sequence[int], table_blocks: Sequence[int]) -> int:
+        """Register the *full* blocks of `tokens` (a prompt prefix whose KV
+        is final in `table_blocks`, the owning request's table). Pages new
+        to the tree gain a cache reference; paths already present are kept
+        (the request's duplicate page stays private). Returns pages added."""
+        blk = self.block_size
+        n_full = len(tokens) // blk
+        toks = [int(t) for t in tokens]
+        children = self._children
+        parent: Optional[_Node] = None
+        now = self._tick()
+        added = 0
+        for i in range(n_full):
+            key = tuple(toks[i * blk:(i + 1) * blk])
+            node = children.get(key)
+            if node is None:
+                block = int(table_blocks[i])
+                if block in self._by_block:
+                    break  # page already backs another path; stop extending
+                node = _Node(key, block, parent)
+                children[key] = node
+                self._by_block[block] = node
+                self.pager.share(block)
+                added += 1
+            node.last_hit = now
+            parent = node
+            children = node.children
+        return added
+
+    # ------------------------------------------------------------- evict
+
+    def evict(self, n_blocks: int,
+              protect: FrozenSet[int] = frozenset()) -> List[int]:
+        """Free up to `n_blocks` pages: least-recently-hit leaves whose only
+        remaining reference is the cache itself (never pages still in a
+        live table, never `protect`). Evicting a leaf may expose its parent
+        as the next candidate. Returns the freed page ids."""
+        evicted: List[int] = []
+        while len(evicted) < n_blocks:
+            best: Optional[_Node] = None
+            for node in self._by_block.values():
+                if node.children or node.block in protect:
+                    continue
+                if self.pager.refcount(node.block) != 1:
+                    continue  # a live request still reads this page
+                if best is None or node.last_hit < best.last_hit:
+                    best = node
+            if best is None:
+                break
+            siblings = best.parent.children if best.parent else self._children
+            del siblings[best.tokens]
+            del self._by_block[best.block]
+            self.pager.release(best.block)
+            evicted.append(best.block)
+            self.evictions += 1
+        return evicted
+
+    # -------------------------------------------------------------- misc
+
+    def block_refs(self) -> Dict[int, int]:
+        """Per-page cache references, for `KVPager.check_invariants`."""
+        return {b: 1 for b in self._by_block}
+
+    def stats(self) -> Dict[str, int]:
+        return {"cached_blocks": len(self._by_block),
+                "lookups": self.lookups,
+                "evictions": self.evictions}

@@ -10,29 +10,42 @@ capped by the context the scratchpad can hold".
 States:
 
   WAITING  - queued; admitted when the pool can hold its prompt
-  RUNNING  - blocks allocated, decoded every round
-  FINISHED - done; blocks returned to the pool
+  PREFILL  - blocks allocated, prompt KV being written chunk by chunk
+  RUNNING  - prefill complete, decoded every round
+  FINISHED - done; block references returned to the pool
 
-Preemption: when a running request needs a page and the pool is dry, the
-*latest-admitted* other running request is evicted — its pages are freed and
-it re-queues at the front of the waiting line, keeping everything it has
-generated so far (recompute-on-readmit: its next prefill covers prompt +
-generated). Evicting the newest request is the policy that never starves
-the oldest one, so every admitted request eventually finishes as long as
-the pool can hold a single maximal request.
+Rounds mix work under a **token budget** (`plan_round`): every running
+request decodes one token (decode is never starved by prefill), and the
+leftover budget is spent on prefill chunks of admitted-but-unfinished
+prompts, oldest admission first. A long prompt therefore trickles through
+several rounds instead of stalling every in-flight decode for one
+monolithic prefill — the chunks and the decode steps share the same paged
+pipeline and the same rounds.
+
+Pool pressure resolves in two stages: first `reclaim` (the engine's hook
+that evicts cache-only pages from the prefix index, LRU), then preemption —
+the *latest-admitted* other in-flight request is evicted: its page
+references are dropped and it re-queues at the front of the waiting line,
+keeping everything it has generated so far (recompute-on-readmit — which,
+with the prefix cache, usually turns into a cheap prefix hit on its own
+surviving pages). Evicting the newest request never starves the oldest, so
+every admitted request eventually finishes as long as the pool can hold a
+single maximal request.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, List
+from typing import Callable, Deque, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.serve.kv_pager import KVPager, PoolExhausted
+from repro.serve.prefix_cache import MISS, PrefixMatch
 
 
 class RequestState(enum.Enum):
     WAITING = "waiting"
+    PREFILL = "prefill"
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -46,9 +59,14 @@ class Request:
     max_new_tokens: int
     state: RequestState = RequestState.WAITING
     generated: List[int] = dataclasses.field(default_factory=list)
-    kv_len: int = 0                  # tokens with KV stored in the pool
+    kv_len: int = 0                  # tokens with pool room reserved
+    prefill_pos: int = 0             # context tokens whose KV is written
+    matched_len: int = 0             # prefix-cache tokens reused (last admit)
     preemptions: int = 0
     admit_seq: int = -1              # order of the (latest) admission
+    submit_s: float = 0.0            # wall clock at submit (engine stamps)
+    first_token_s: Optional[float] = None
+    last_emit_s: Optional[float] = None
 
     @property
     def context(self) -> List[int]:
@@ -59,16 +77,36 @@ class Request:
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit -> first token wall time (None until the first token)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submit_s
+
+
+# reclaim hook: (blocks_needed, protect) -> blocks actually freed
+ReclaimFn = Callable[[int, FrozenSet[int]], int]
+# prefix lookup hook: context tokens -> PrefixMatch
+MatchFn = Callable[[Sequence[int]], PrefixMatch]
+
 
 class ContinuousBatchingScheduler:
-    """Admit / evict / preempt on pool pressure; assemble decode rounds."""
+    """Admit / evict / preempt on pool pressure; assemble budgeted rounds."""
 
-    def __init__(self, pager: KVPager, max_in_flight: int):
+    def __init__(self, pager: KVPager, max_in_flight: int, *,
+                 token_budget: Optional[int] = None,
+                 reclaim: Optional[ReclaimFn] = None):
         if max_in_flight < 1:
             raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {token_budget}")
         self.pager = pager
         self.max_in_flight = int(max_in_flight)
+        self.token_budget = token_budget
+        self.reclaim = reclaim
         self.waiting: Deque[Request] = deque()
+        self.prefilling: List[Request] = []
         self.running: List[Request] = []
         self.preemptions = 0
         self._admit_seq = 0
@@ -80,73 +118,134 @@ class ContinuousBatchingScheduler:
         self.waiting.append(req)
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.prefilling or self.running)
+
+    def in_flight(self) -> int:
+        return len(self.prefilling) + len(self.running)
 
     # ---------------------------------------------------------- admission
 
-    def admit(self) -> List[Request]:
-        """Move waiting requests to RUNNING while the round has slots and
-        the pool can hold their context. Returns the newly admitted batch
-        (the engine prefills them). FIFO: admission stops at the first
-        request that does not fit, so a large head request cannot be
-        starved by small ones slipping past it."""
+    def admit(self, match: Optional[MatchFn] = None) -> List[Request]:
+        """Move waiting requests to PREFILL while the round has slots and
+        the pool can hold their context. `match` (the engine's prefix-cache
+        lookup) lets an admission reference already-resident prefix pages —
+        only the suffix costs fresh blocks, and only the suffix is
+        prefilled. FIFO: admission stops at the first request that does not
+        fit even after reclaiming cache-only pages, so a large head request
+        cannot be starved by small ones slipping past it."""
         admitted: List[Request] = []
-        while self.waiting and len(self.running) < self.max_in_flight:
+        while self.waiting and self.in_flight() < self.max_in_flight:
             req = self.waiting[0]
-            n_ctx = len(req.context)
-            if not self.pager.can_alloc(n_ctx):
+            ctxt = req.context
+            m = match(ctxt) if match is not None else MISS
+            fresh = self.pager.blocks_for(len(ctxt)) - len(m.blocks)
+            shortfall = fresh - self.pager.free_blocks
+            if shortfall > 0 and self.reclaim is not None:
+                self.reclaim(shortfall, frozenset(m.blocks))
+            if fresh > self.pager.free_blocks:
                 break
             self.waiting.popleft()
-            self.pager.alloc(req.rid, n_ctx)
-            req.kv_len = n_ctx
-            req.state = RequestState.RUNNING
+            self.pager.alloc(req.rid, len(ctxt),
+                             prefix_blocks=m.blocks, prefix_len=m.n_tokens)
+            req.kv_len = len(ctxt)
+            req.prefill_pos = m.n_tokens
+            req.matched_len = m.n_tokens
+            req.state = RequestState.PREFILL
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
-            self.running.append(req)
+            self.prefilling.append(req)
             admitted.append(req)
         return admitted
 
     # --------------------------------------------------------- preemption
 
     def _preempt_one(self, protect: Request) -> bool:
-        """Evict the latest-admitted running request other than `protect`."""
-        victims = [r for r in self.running if r is not protect]
+        """Evict the latest-admitted in-flight request other than `protect`."""
+        victims = [r for r in self.prefilling + self.running if r is not protect]
         if not victims:
             return False
         victim = max(victims, key=lambda r: r.admit_seq)
         self.pager.free(victim.rid)
         victim.kv_len = 0
+        victim.prefill_pos = 0
         victim.state = RequestState.WAITING
         victim.preemptions += 1
         self.preemptions += 1
-        self.running.remove(victim)
+        if victim in self.running:
+            self.running.remove(victim)
+        else:
+            self.prefilling.remove(victim)
         self.waiting.appendleft(victim)
         return True
 
-    def reserve_decode_slot(self, req: Request) -> int:
-        """Reserve pool room for `req`'s next token, preempting on pressure.
-
-        Returns the token's write position. Raises `PoolExhausted` only if
-        `req` *alone* overflows the pool (no victims left to evict) — size
-        the pool for at least one maximal request. A caller iterating a
-        round must re-check each request's state first: reserving for an
-        early request may evict a later one from the same round."""
+    def _under_pressure(self, req: Request, fn):
+        """Run a pager operation, resolving `PoolExhausted` by reclaiming a
+        cache-only page, then by preempting the newest other request; raises
+        only when `req` *alone* overflows the pool. A caller iterating a
+        round must re-check each request's state afterwards: resolving
+        pressure for an early request may evict a later one."""
         while True:
             try:
-                return self.pager.append_token(req.rid)
+                return fn()
             except PoolExhausted:
+                if self.reclaim is not None and self.reclaim(1, frozenset()):
+                    continue
                 if not self._preempt_one(req):
-                    # nothing left to evict: the request alone overflows the
-                    # pool — surface it rather than spinning
                     raise
 
+    def reserve_decode_slot(self, req: Request) -> int:
+        """Reserve pool room for `req`'s next token; returns its position."""
+        return self._under_pressure(
+            req, lambda: self.pager.append_token(req.rid))
+
+    def make_writable(self, req: Request, pos: int):
+        """Copy-on-write guard before writing the KV row at `pos`: forks the
+        containing page if it is shared. Returns the pager's (src, dst) copy
+        order, or None."""
+        return self._under_pressure(
+            req, lambda: self.pager.ensure_writable(req.rid, pos))
+
     # ------------------------------------------------------------- rounds
+
+    def plan_round(self, chunk: Optional[int]) -> Tuple[
+            List[Request], List[Tuple[Request, int]]]:
+        """One round's work under the token budget: every RUNNING request
+        decodes (1 token each, never starved), then the leftover budget is
+        spent on prefill chunks of at most `chunk` tokens (None: the whole
+        remaining prompt), oldest admission first."""
+        decodes = sorted(self.running, key=lambda r: r.admit_seq)
+        left: Optional[int] = None
+        if self.token_budget is not None:
+            left = max(self.token_budget - len(decodes), 0)
+        plans: List[Tuple[Request, int]] = []
+        for req in sorted(self.prefilling, key=lambda r: r.admit_seq):
+            if left is not None and left <= 0:
+                break
+            n = len(req.context) - req.prefill_pos
+            if chunk is not None:
+                n = min(n, chunk)
+            if left is not None:
+                n = min(n, left)
+            if n > 0:
+                plans.append((req, n))
+                if left is not None:
+                    left -= n
+        return decodes, plans
 
     def round(self) -> List[Request]:
         """The requests decoding this round, oldest admission first."""
         return sorted(self.running, key=lambda r: r.admit_seq)
 
+    def promote(self, req: Request) -> None:
+        """Prefill complete: the request decodes from the next round on."""
+        self.prefilling.remove(req)
+        req.state = RequestState.RUNNING
+        self.running.append(req)
+
     def finish(self, req: Request) -> None:
         self.pager.free(req.rid)
         req.state = RequestState.FINISHED
-        self.running.remove(req)
+        if req in self.running:
+            self.running.remove(req)
+        else:
+            self.prefilling.remove(req)

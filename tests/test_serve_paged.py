@@ -68,6 +68,110 @@ def test_pager_failed_alloc_leaves_state_intact():
     assert not pager.owns(1)
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pager_refcount_fuzz_share_fork_free_evict(seed):
+    """Refcount state machine under randomized share/fork/free/evict
+    interleavings: every usable block stays free xor owned-by-one xor
+    shared-by-many (plus emulated external cache refs), the garbage page is
+    never refcounted, and draining everything returns the whole pool."""
+    rng = np.random.RandomState(1000 + seed)
+    pager = KVPager(num_blocks=16, block_size=4)
+    live, next_rid = [], 0
+    cache_refs = {}  # emulated prefix-cache references
+
+    for _ in range(500):
+        op = rng.choice(["alloc", "append", "share", "evict", "free", "fork"])
+        if op == "alloc":
+            n = int(rng.randint(1, 20))
+            if pager.can_alloc(n):
+                pager.alloc(next_rid, n)
+                live.append(next_rid)
+                next_rid += 1
+        elif op == "append" and live:
+            rid = live[rng.randint(len(live))]
+            try:
+                pos = pager.append_token(rid)
+                pager.ensure_writable(rid, pos)  # CoW if the page is shared
+            except PoolExhausted:
+                assert pager.free_blocks == 0
+        elif op == "share" and live:
+            rid = live[rng.randint(len(live))]
+            table = pager.block_table(rid)
+            b = table[rng.randint(len(table))]
+            pager.share(b)
+            cache_refs[b] = cache_refs.get(b, 0) + 1
+        elif op == "evict" and cache_refs:
+            b = list(cache_refs)[rng.randint(len(cache_refs))]
+            pager.release(b)
+            cache_refs[b] -= 1
+            if cache_refs[b] == 0:
+                del cache_refs[b]
+        elif op == "free" and live:
+            rid = live.pop(rng.randint(len(live)))
+            pager.free(rid)  # cache-shared pages must survive this
+        elif op == "fork" and live:
+            rid = live[rng.randint(len(live))]
+            pos = rng.randint(pager.length(rid))
+            try:
+                copy = pager.ensure_writable(rid, pos)
+            except PoolExhausted:
+                assert pager.free_blocks == 0
+                continue
+            if copy is not None:
+                src, dst = copy
+                assert src != dst
+                assert dst in pager.block_table(rid)
+                assert src not in pager.block_table(rid)
+        pager.check_invariants(extra_refs=cache_refs)
+
+    for rid in live:
+        pager.free(rid)
+    for b, n in list(cache_refs.items()):
+        for _ in range(n):
+            pager.release(b)
+    pager.check_invariants()
+    assert pager.free_blocks == pager.num_blocks
+
+
+def test_pager_cow_forks_only_shared_pages():
+    """ensure_writable is a no-op on private pages, forks shared ones, and
+    the fork leaves the original alive for its other reference."""
+    pager = KVPager(num_blocks=8, block_size=4)
+    t0 = pager.alloc(0, 8)  # two blocks
+    assert pager.ensure_writable(0, 5) is None  # private: nothing to do
+    pager.share(t0[1])  # emulate a prefix-cache ref on block 1
+    src, dst = pager.ensure_writable(0, 5)
+    assert src == t0[1] and dst != src
+    assert pager.refcount(src) == 1 and pager.refcount(dst) == 1
+    pager.check_invariants(extra_refs={src: 1})
+    pager.free(0)
+    pager.release(src)
+    pager.check_invariants()
+    assert pager.free_blocks == pager.num_blocks
+
+
+def test_pager_prefix_alloc_shares_blocks():
+    """alloc(prefix_blocks=...) increfs resident pages instead of popping
+    fresh ones; freeing either owner keeps the other's view alive."""
+    pager = KVPager(num_blocks=8, block_size=4)
+    ta = pager.alloc(0, 12)  # 3 blocks
+    popped = pager.blocks_allocated
+    tb = pager.alloc(1, 12, prefix_blocks=ta[:2], prefix_len=8)
+    assert pager.blocks_allocated == popped + 1  # only the suffix popped
+    assert tb[:2] == ta[:2] and tb[2] != ta[2]
+    assert pager.refcount(ta[0]) == 2
+    pager.check_invariants()
+    pager.free(0)
+    assert pager.refcount(ta[0]) == 1  # request 1 still reads it
+    pager.check_invariants()
+    pager.free(1)
+    pager.check_invariants()
+    assert pager.free_blocks == pager.num_blocks
+    with pytest.raises(ValueError):
+        # a full-prompt prefix must still leave >= 1 token to prefill
+        pager.alloc(2, 8, prefix_blocks=[1, 2], prefix_len=8)
+
+
 def test_pager_padded_table_uses_garbage_page():
     pager = KVPager(num_blocks=8, block_size=4)
     pager.alloc(7, 10)
@@ -114,7 +218,10 @@ def test_scheduler_preempts_latest_admitted_on_growth():
     a, b, c = _req(0, 4), _req(1, 4), _req(2, 4)
     for r in (a, b, c):
         sched.submit(r)
-    assert len(sched.admit()) == 3  # one block each, pool now full
+    admitted = sched.admit()
+    assert len(admitted) == 3  # one block each, pool now full
+    for r in admitted:
+        sched.promote(r)  # prefill done; decode from here on
     # growing the oldest evicts the newest, never the oldest itself
     for _ in range(pager.block_size):
         sched.reserve_decode_slot(a)
