@@ -289,7 +289,16 @@ def json_report() -> dict:
     """Machine-stamped report (ISSUE-6 CI lane): active profile, per-kernel
     static solve vs the depth actually run, and observed p99 per-tile latency
     from the always-on telemetry. Each workload runs twice — the first run is
-    compile warmup (dropped by the warmup skip), the second records."""
+    compile warmup (dropped by the warmup skip), the second records.
+
+    ISSUE-8 additions: each kernel carries the Fig. 14-style stall
+    `breakdown` (compute / exposed transfer / scheduling gap attribution of
+    its observed per-tile time against the active `MachineModel`), and the
+    report embeds the default `obs.metrics` registry snapshot — the
+    real-v5e measurement run reads hardware truth through this one report.
+    """
+    from repro.obs import metrics as obs_metrics
+
     m = get_machine()
     workloads = _json_workloads()
     for _, run in workloads:
@@ -299,6 +308,8 @@ def json_report() -> dict:
     kernels = {}
     for spec, _ in workloads:
         t = summ["kernels"].get(spec.name, {})
+        # choose_depth AFTER the runs so it reports the static solve without
+        # disturbing the telemetry the runs recorded
         kernels[spec.name] = {
             "static_depth": autotune.choose_depth(spec.profile(),
                                                   vars=spec.all_vars()),
@@ -306,8 +317,10 @@ def json_report() -> dict:
             "mode": t.get("mode"),
             "samples": t.get("samples", 0),
             "observed_p99_us": t.get("p99_us"),
+            "breakdown": t.get("breakdown"),
         }
-    return {"machine": m.name, "profile": m.summary(), "kernels": kernels}
+    return {"machine": m.name, "profile": m.summary(), "kernels": kernels,
+            "metrics": obs_metrics.default_registry().snapshot()}
 
 
 def table() -> str:
@@ -333,11 +346,18 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
                     help="machine-stamped JSON report instead of CSV tables")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the bench run's span trace as Chrome "
+                         "trace-event JSON (open in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.json:
         print(json.dumps(json_report(), indent=2))
     else:
         print(table())
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.get_tracer().export(args.trace)
 
 
 if __name__ == "__main__":

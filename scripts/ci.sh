@@ -29,6 +29,40 @@ echo "   (includes the prefix smoke: shared system prompt must hit the"
 echo "    prefix cache and pop strictly fewer pool blocks than cache-off)"
 python examples/serve_batched.py --engine paged --prefix-cache
 
+echo "== trace smoke: paged serve with --trace must emit a valid Perfetto trace =="
+trace_out="$(mktemp /tmp/repro_trace.XXXXXX.json)"
+python -m repro.launch.serve --arch yi-6b --reduced --batch 2 \
+    --prompt-len 16 --gen 3 --engine paged --block-size 4 \
+    --trace "$trace_out" >/dev/null
+python - "$trace_out" <<'EOF'
+import json, sys
+path = sys.argv[1]
+doc = json.load(open(path))  # raises on missing/invalid JSON
+events = doc["traceEvents"]
+assert events, f"{path}: traceEvents is empty"
+names = {ev["name"] for ev in events}
+for required in ("round", "decode_round", "pipeline:paged_decode"):
+    assert required in names, f"{path}: missing '{required}' spans ({sorted(names)})"
+print(f"ok: {len(events)} trace events ({len(names)} span kinds) in {path}")
+EOF
+rm -f "$trace_out"
+
+echo "== metrics smoke: kernel_bench --json must embed the registry snapshot =="
+bench_out="$(mktemp /tmp/repro_bench.XXXXXX.json)"
+PYTHONPATH="$PYTHONPATH:." python -m benchmarks.kernel_bench --json > "$bench_out"
+python - "$bench_out" <<'EOF'
+import json, sys
+rep = json.load(open(sys.argv[1]))
+assert "metrics" in rep and "autotune" in rep["metrics"], rep.keys()
+kernels = rep["metrics"]["autotune"]["kernels"]
+assert kernels, "kernel_bench run recorded no autotune samples"
+with_bd = [k for k, v in rep["kernels"].items() if v.get("breakdown")]
+assert with_bd, "no kernel produced a stall breakdown"
+print(f"ok: metrics snapshot covers {len(kernels)} kernels; "
+      f"breakdown on {sorted(with_bd)}")
+EOF
+rm -f "$bench_out"
+
 echo "== machine smoke: far-memory profile must solve strictly deeper =="
 near_json="$(python scripts/machine_smoke.py)"
 far_json="$(REPRO_MACHINE=v5e-far-800ns python scripts/machine_smoke.py)"

@@ -57,12 +57,14 @@ from repro.core.schedule import (
     adaptive_depth,
     solve_depth,
 )
+from repro.obs.metrics import percentile
 
 __all__ = [
     "TileProfile",
     "choose_depth",
     "clear_samples",
     "last_choice",
+    "last_profile",
     "observe_pipeline",
     "profile_decode",
     "profile_gmm",
@@ -89,6 +91,7 @@ _lock = threading.Lock()
 _transfer_samples: Dict[Tuple[str, str], List[float]] = {}
 _last_choice: Dict[Tuple[str, str], int] = {}
 _last_mode: Dict[Tuple[str, str], str] = {}       # "static" | "adaptive"
+_last_profile: Dict[Tuple[str, str], TileProfile] = {}  # for obs.breakdown
 _warmed: Set[Tuple[str, str, int]] = set()        # (machine, kernel, n_tiles)
 _telemetry_on: bool = os.environ.get(TELEMETRY_ENV, "1") not in ("0", "off")
 
@@ -197,12 +200,14 @@ def clear_samples(kernel: Optional[str] = None) -> None:
             _transfer_samples.clear()
             _last_choice.clear()
             _last_mode.clear()
+            _last_profile.clear()
             _warmed.clear()
         else:
             k = _key(kernel)
             _transfer_samples.pop(k, None)
             _last_choice.pop(k, None)
             _last_mode.pop(k, None)
+            _last_profile.pop(k, None)
             _warmed.difference_update(
                 {w for w in _warmed if w[:2] == k})
 
@@ -212,6 +217,13 @@ def last_choice(kernel: str) -> Optional[int]:
     under the active machine profile."""
     with _lock:
         return _last_choice.get(_key(kernel))
+
+
+def last_profile(kernel: str) -> Optional[TileProfile]:
+    """Tile profile of the most recent `choose_depth` call for `kernel`
+    under the active machine (what `obs.breakdown` attributes against)."""
+    with _lock:
+        return _last_profile.get(_key(kernel))
 
 
 def record_choice(kernel: str, depth: int) -> None:
@@ -259,19 +271,25 @@ def observe_pipeline(kernel: str, wall_s: float, n_tiles: int) -> None:
     record_transfer(kernel, wall_s / n_tiles)
 
 
-def _percentile(xs: List[float], q: float) -> float:
-    ys = sorted(xs)
-    return ys[min(int(q * len(ys)), len(ys) - 1)]
-
-
 def telemetry_summary() -> Dict[str, Any]:
     """Per-kernel feedback-loop state under the active machine profile.
 
     Returns ``{"machine": name, "kernels": {kernel: {samples, p50_us,
-    p99_us, depth, mode}}}`` where `depth` is the depth the kernel last ran
-    (`last_choice`) and `mode` says whether that decision came from the
-    static data-sheet solve or the adaptive re-solve over observed samples.
+    p99_us, depth, mode, breakdown?}}}`` where `depth` is the depth the
+    kernel last ran (`last_choice`), `mode` says whether that decision came
+    from the static data-sheet solve or the adaptive re-solve over observed
+    samples, and `breakdown` (present when both samples and a recorded tile
+    profile exist) is `obs.breakdown.attribute`'s Fig. 14-style split of
+    the observed p50 per-tile time into compute / exposed transfer /
+    scheduling gap. Percentiles route through `obs.metrics.percentile` —
+    the one shared implementation (ISSUE-8).
+
+    This summary is also served as the ``autotune`` view of
+    `obs.metrics.default_registry()`, so one registry snapshot covers the
+    engine counters and the kernel feedback loop alike.
     """
+    from repro.obs import breakdown as breakdown_mod  # local: obs ties back
+
     m = get_machine()
     with _lock:
         kernels = sorted({k for mk, k in _transfer_samples if mk == m.name}
@@ -286,8 +304,13 @@ def telemetry_summary() -> Dict[str, Any]:
                 "mode": _last_mode.get(key, "static"),
             }
             if xs:
-                entry["p50_us"] = round(_percentile(xs, 0.50) * 1e6, 3)
-                entry["p99_us"] = round(_percentile(xs, 0.99) * 1e6, 3)
+                p50_s = percentile(xs, 0.50)
+                entry["p50_us"] = round(p50_s * 1e6, 3)
+                entry["p99_us"] = round(percentile(xs, 0.99) * 1e6, 3)
+                prof = _last_profile.get(key)
+                if prof is not None:
+                    entry["breakdown"] = breakdown_mod.attribute(
+                        prof, _last_choice.get(key), p50_s, machine=m)
             out["kernels"][kernel] = entry
     return out
 
@@ -344,4 +367,5 @@ def choose_depth(
         with _lock:
             _last_choice[key] = depth
             _last_mode[key] = mode
+            _last_profile[key] = profile
     return depth

@@ -207,13 +207,20 @@ class CoroRefs:
         self.__dict__.update(mapping)
 
 
-def _observe_pipeline(kernel: str, t0: float, out, n_tiles: int) -> None:
+def _observe_pipeline(spec: "CoroSpec", t0: float, out, n_tiles: int,
+                      depth: int) -> None:
     """Always-on transfer telemetry (ISSUE-6): wall-clock the launched
     pipeline and feed `autotune.observe_pipeline` (which drops the compile
     warmup and records wall/tiles as a per-tile transfer sample). Skipped
     under jit tracing — there is no wall clock to observe — and when
-    `autotune.set_telemetry(False)`/``REPRO_TELEMETRY=0`` turned it off."""
+    `autotune.set_telemetry(False)`/``REPRO_TELEMETRY=0`` turned it off.
+
+    The same wall clock becomes one ``pipeline:<kernel>`` span on the
+    observability tracer (ISSUE-8), carrying the depth / n_tiles /
+    classified context-bytes attributes DESIGN.md §2.5 documents — a null
+    no-op when tracing is off."""
     from repro.core import autotune  # local: mirror coro_call's lazy import
+    from repro.obs import trace
 
     if not autotune.telemetry_enabled():
         return
@@ -221,7 +228,13 @@ def _observe_pipeline(kernel: str, t0: float, out, n_tiles: int) -> None:
     if any(isinstance(x, jax.core.Tracer) for x in leaves):
         return
     jax.block_until_ready(out)
-    autotune.observe_pipeline(kernel, time.perf_counter() - t0, n_tiles)
+    wall_s = time.perf_counter() - t0
+    autotune.observe_pipeline(spec.name, wall_s, n_tiles)
+    tracer = trace.get_tracer()
+    end_us = tracer.now_us()
+    tracer.complete(f"pipeline:{spec.name}", end_us - wall_s * 1e6,
+                    wall_s * 1e6, tid=trace.TID_KERNEL, depth=depth,
+                    n_tiles=n_tiles, context_bytes=spec.context_bytes(depth))
 
 
 # ----------------------------------------------------------- the rotation
@@ -542,5 +555,5 @@ def coro_call(
                               **kwargs)
     t0 = time.perf_counter()
     out = call(*operands)
-    _observe_pipeline(spec.name, t0, out, n_tiles)
+    _observe_pipeline(spec, t0, out, n_tiles, depth)
     return out

@@ -28,7 +28,8 @@ from repro.configs import get_config, token_split
 from repro.core import autotune
 from repro.core.machine import get_machine
 from repro.models import build_model
-from repro.serve.engine import latency_report
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import latency_report
 from repro.sharding import NULL_CTX
 
 
@@ -62,11 +63,13 @@ def timed_decode_loop(decode, params, cache, tokens, *, steps, make_batch):
     """
     out = [tokens]
     lat = []
+    tracer = obs_trace.get_tracer()  # fetched once: null no-op when off
     for i in range(steps):
         t0 = time.perf_counter()
-        logits, cache = decode(params, cache, make_batch(tokens, i))
-        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        jax.block_until_ready(tokens)
+        with tracer.span("decode_step", step=i, batch=int(tokens.shape[0])):
+            logits, cache = decode(params, cache, make_batch(tokens, i))
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tokens)
         dt = time.perf_counter() - t0
         lat.append(dt)
         if autotune.telemetry_enabled():
@@ -182,6 +185,9 @@ def main(argv=None):
                          "(paged engine; --no-prefix-cache disables)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="tokens per chunked-prefill step (paged engine)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the run's span trace as Chrome trace-event "
+                         "JSON (open in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -192,6 +198,9 @@ def main(argv=None):
                   block_size=args.block_size, num_blocks=args.num_blocks,
                   prefix_cache=args.prefix_cache,
                   prefill_chunk=args.prefill_chunk)
+    if args.trace:
+        stats["trace"] = obs_trace.get_tracer().export(args.trace)
+        stats["trace_events"] = len(obs_trace.get_tracer().events)
     print(json.dumps(stats))
     return stats
 

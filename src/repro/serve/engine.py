@@ -28,6 +28,17 @@ Because freed pages are reused immediately, the aggregate KV served over a
 workload routinely exceeds what the same HBM held as a dense
 ``[batch, max_len]`` cache — `stats()["kv_oversubscription"]` reports the
 ratio.
+
+Observability (ISSUE-8, DESIGN.md §2.5): every engine instance owns one
+`obs.metrics` registry — the prefix/COW counters and the token-latency /
+TTFT / TBT histograms live there, and `stats()` is a read-time view over
+it, not a parallel dict. The engine also feeds the process tracer
+(`obs.trace`): per-round / decode-round / prefill-chunk spans, an async
+``request`` span per request lifetime, a ``pipeline:paged_decode`` span per
+decode round (depth / n_tiles / context-bytes attributes), and instant
+events for COW forks and cache evictions (preemptions are emitted by the
+scheduler). Both degrade to module-level null objects under
+``REPRO_TELEMETRY=0`` — no per-call branching in the round loop.
 """
 from __future__ import annotations
 
@@ -43,6 +54,10 @@ from repro.core import autotune
 from repro.core.machine import get_machine
 from repro.kernels.decode_attention.decode_attention import paged_decode_spec
 from repro.models import build_model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import latency_report  # noqa: F401  (re-export; the
+#   one shared implementation lives in obs.metrics — ISSUE-8 satellite)
 from repro.serve.kv_pager import KVPager
 from repro.serve.prefill import ChunkedPrefiller
 from repro.serve.prefix_cache import MISS, PrefixCache, PrefixMatch
@@ -52,18 +67,6 @@ from repro.serve.scheduler import (
     RequestState,
 )
 from repro.sharding import NULL_CTX, ShardingCtx
-
-
-def latency_report(samples_s: List[float]) -> Dict[str, float]:
-    """The one latency-stats dict every serving path reports: p50/p99/mean
-    of a per-token latency sample list, in milliseconds. Shared by the
-    paged engine (`stats`) and both engines in `launch.serve`."""
-    if not samples_s:
-        return {"p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
-    arr = np.asarray(samples_s) * 1e3
-    return {"p50_ms": round(float(np.percentile(arr, 50)), 3),
-            "p99_ms": round(float(np.percentile(arr, 99)), 3),
-            "mean_ms": round(float(arr.mean()), 3)}
 
 
 class PagedServingEngine:
@@ -101,6 +104,7 @@ class PagedServingEngine:
                                  max_blocks=max(num_blocks, 1))
         self.solved_depth = autotune.choose_depth(
             spec.profile(), kernel="paged_decode", vars=spec.all_vars())
+        self._pipeline_ctx_bytes = spec.context_bytes(self.solved_depth)
         # a round can't usefully exceed one block-owning request per block
         self.round_width = int(max_in_flight
                                or min(max(2, self.solved_depth), num_blocks))
@@ -127,15 +131,61 @@ class PagedServingEngine:
         self._decode_fn_width = 0
         self._decode_fresh = False
         self.rounds = 0
-        self.prefill_s = 0.0
-        self.decode_s = 0.0
-        self.prefix_hits = 0
-        self.prefix_tokens = 0
-        self.blocks_shared = 0
-        self.cow_forks = 0
-        self.token_latencies_s: List[float] = []
-        self.tbt_s: List[float] = []            # inter-token gaps (fairness)
         self.finished: List[Request] = []
+
+        # one registry per engine instance (two engines in one process must
+        # not mix counters); `stats()` is a view over it — ISSUE-8. The
+        # tracer is fetched once: the round loop calls through it with no
+        # enabled() branching (null objects under REPRO_TELEMETRY=0).
+        self.metrics = obs_metrics.new_registry()
+        self.tracer = obs_trace.get_tracer()
+        m = self.metrics
+        self._c_prefix_hits = m.counter("serve.prefix_hits")
+        self._c_prefix_tokens = m.counter("serve.prefix_tokens")
+        self._c_blocks_shared = m.counter("serve.blocks_shared")
+        self._c_cow_forks = m.counter("serve.cow_forks")
+        self._c_prefill_s = m.counter("serve.prefill_s")
+        self._c_decode_s = m.counter("serve.decode_s")
+        self._h_token = m.histogram("serve.token_latency_s")
+        self._h_tbt = m.histogram("serve.tbt_s")   # inter-token gaps
+        self._h_ttft = m.histogram("serve.ttft_s")
+
+    # ------------------------------------------------- registry views
+    #
+    # read-only aliases of the registry metrics, kept so callers (tests,
+    # notebooks) that peeked at the old plain attributes still work
+
+    @property
+    def prefix_hits(self) -> int:
+        return int(self._c_prefix_hits.value)
+
+    @property
+    def prefix_tokens(self) -> int:
+        return int(self._c_prefix_tokens.value)
+
+    @property
+    def blocks_shared(self) -> int:
+        return int(self._c_blocks_shared.value)
+
+    @property
+    def cow_forks(self) -> int:
+        return int(self._c_cow_forks.value)
+
+    @property
+    def prefill_s(self) -> float:
+        return self._c_prefill_s.value
+
+    @property
+    def decode_s(self) -> float:
+        return self._c_decode_s.value
+
+    @property
+    def token_latencies_s(self) -> List[float]:
+        return self._h_token.samples
+
+    @property
+    def tbt_s(self) -> List[float]:
+        return self._h_tbt.samples
 
     # -------------------------------------------------------------- intake
 
@@ -156,6 +206,10 @@ class PagedServingEngine:
         req.submit_s = time.perf_counter()
         self._requests[rid] = req
         self.scheduler.submit(req)
+        self.tracer.begin_async("request", rid,
+                                tid=obs_trace.TID_REQUEST_BASE + rid,
+                                prompt_len=len(prompt),
+                                max_new_tokens=int(max_new_tokens))
         return rid
 
     def request(self, rid: int) -> Request:
@@ -172,19 +226,25 @@ class PagedServingEngine:
     def _match(self, tokens) -> PrefixMatch:
         if self.prefix_cache is None:
             return MISS
-        return self.prefix_cache.match(tokens)
+        with self.tracer.span("prefix_lookup", n_tokens=len(tokens)):
+            return self.prefix_cache.match(tokens)
 
     def _reclaim(self, n_blocks: int, protect: FrozenSet[int]) -> int:
         """Scheduler pressure hook: drop LRU cache-only pages."""
         if self.prefix_cache is None:
             return 0
-        return len(self.prefix_cache.evict(n_blocks, protect))
+        freed = len(self.prefix_cache.evict(n_blocks, protect))
+        if freed:
+            self.tracer.instant("cache_evict", requested=n_blocks,
+                                freed=freed)
+        return freed
 
     def _copy_page(self, src: int, dst: int) -> None:
         """Materialise a copy-on-write fork in the physical pools."""
         self.k_pools = self.k_pools.at[:, dst].set(self.k_pools[:, src])
         self.v_pools = self.v_pools.at[:, dst].set(self.v_pools[:, src])
-        self.cow_forks += 1
+        self._c_cow_forks.inc()
+        self.tracer.instant("cow_fork", src=src, dst=dst)
 
     def _make_writable(self, req: Request, pos: int) -> None:
         copy = self.scheduler.make_writable(req, pos)
@@ -209,10 +269,11 @@ class PagedServingEngine:
         tw = self._table_width()
         table = self.pager.padded_table(req.rid, tw)
         t0 = time.perf_counter()
-        logits, self.k_pools, self.v_pools, _ = self.prefiller.run_chunk(
-            self.params, self.k_pools, self.v_pools,
-            ctxt[start:start + n], table, start, n)
-        self.prefill_s += time.perf_counter() - t0
+        with self.tracer.span("prefill_chunk", rid=req.rid, start=start, n=n):
+            logits, self.k_pools, self.v_pools, _ = self.prefiller.run_chunk(
+                self.params, self.k_pools, self.v_pools,
+                ctxt[start:start + n], table, start, n)
+        self._c_prefill_s.inc(time.perf_counter() - t0)
         req.prefill_pos = start + n
         if self.prefix_cache is not None:
             self.prefix_cache.insert(ctxt[:req.prefill_pos],
@@ -221,10 +282,7 @@ class PagedServingEngine:
             first = int(jnp.argmax(logits[0]))
             self._emit(req, first)
             if req.done:  # max_new_tokens == 1: satisfied by this token
-                self.scheduler.finish(req)
-                self.finished.append(req)
-                if self.on_finish:
-                    self.on_finish(req)
+                self._finish(req)
             else:
                 self.scheduler.promote(req)
 
@@ -233,11 +291,25 @@ class PagedServingEngine:
         if req.first_token_s is None:
             req.first_token_s = now
         elif req.last_emit_s is not None:
-            self.tbt_s.append(now - req.last_emit_s)
+            self._h_tbt.observe(now - req.last_emit_s)
         req.last_emit_s = now
         req.generated.append(token)
         if self.on_token:
             self.on_token(req, token)
+
+    def _finish(self, req: Request) -> None:
+        """Retire one request: free its pages, close its lifecycle span,
+        and fold its TTFT into the registry histogram."""
+        self.scheduler.finish(req)
+        self.finished.append(req)
+        if req.ttft_s is not None:
+            self._h_ttft.observe(req.ttft_s)
+        self.tracer.end_async("request", req.rid,
+                              tid=obs_trace.TID_REQUEST_BASE + req.rid,
+                              generated=len(req.generated),
+                              preemptions=req.preemptions)
+        if self.on_finish:
+            self.on_finish(req)
 
     # -------------------------------------------------------------- decode
 
@@ -297,33 +369,40 @@ class PagedServingEngine:
 
         decode = self._decode(tw)
         t0 = time.perf_counter()
-        nxt, self.k_pools, self.v_pools = decode(
-            self.params, self.k_pools, self.v_pools,
-            jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lengths))
-        nxt = np.asarray(jax.block_until_ready(nxt))
+        with self.tracer.span("decode_round", width=len(writable),
+                              table_width=tw):
+            nxt, self.k_pools, self.v_pools = decode(
+                self.params, self.k_pools, self.v_pools,
+                jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lengths))
+            nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
-        self.decode_s += dt
+        self._c_decode_s.inc(dt)
 
         # always-on transfer telemetry (ISSUE-6): every decode round feeds
         # the same (machine, kernel) store the paged kernel's pipeline does —
-        # wall clock over the KV page-tiles this round actually attended
+        # wall clock over the KV page-tiles this round actually attended.
+        # The same interval is the round's `pipeline:paged_decode` span on
+        # the tracer (ISSUE-8), depth / n_tiles / context-bytes attributes
+        # matching what coro_call stamps on a real kernel launch.
+        tiles = sum(self.pager.blocks_for(int(n) + 1)
+                    for n in (lengths[i] for i in range(len(writable))))
+        end_us = self.tracer.now_us()
+        self.tracer.complete("pipeline:paged_decode", end_us - dt * 1e6,
+                             dt * 1e6, tid=obs_trace.TID_KERNEL,
+                             depth=self.solved_depth, n_tiles=tiles,
+                             context_bytes=self._pipeline_ctx_bytes,
+                             jit_warmup=self._decode_fresh)
         if self._decode_fresh:
             self._decode_fresh = False  # round paid jit compile; don't record
-        else:
-            tiles = sum(self.pager.blocks_for(int(n) + 1)
-                        for n in (lengths[i] for i in range(len(writable))))
-            if autotune.telemetry_enabled() and tiles:
-                autotune.record_transfer("paged_decode", dt / tiles)
+        elif autotune.telemetry_enabled() and tiles:
+            autotune.record_transfer("paged_decode", dt / tiles)
 
         for i, req in enumerate(writable):
             req.kv_len = self.pager.length(req.rid)
             self._emit(req, int(nxt[i]))
-            self.token_latencies_s.append(dt)
+            self._h_token.observe(dt)
             if req.done:
-                self.scheduler.finish(req)
-                self.finished.append(req)
-                if self.on_finish:
-                    self.on_finish(req)
+                self._finish(req)
         return len(writable)
 
     # --------------------------------------------------------------- round
@@ -332,22 +411,27 @@ class PagedServingEngine:
         """One budgeted scheduler round: admit (with prefix lookup), decode
         one token for every running request, then spend the leftover budget
         on prefill chunks. Returns tokens emitted this round."""
-        for req in self.scheduler.admit(match=self._match):
-            if req.matched_len > 0:
-                self.prefix_hits += 1
-                self.prefix_tokens += req.matched_len
-                self.blocks_shared += self.pager.blocks_for(req.matched_len)
+        with self.tracer.span("round", n=self.rounds):
+            for req in self.scheduler.admit(match=self._match):
+                self.tracer.instant("admit", rid=req.rid,
+                                    matched=req.matched_len,
+                                    context=len(req.context))
+                if req.matched_len > 0:
+                    self._c_prefix_hits.inc()
+                    self._c_prefix_tokens.inc(req.matched_len)
+                    self._c_blocks_shared.inc(
+                        self.pager.blocks_for(req.matched_len))
 
-        decodes, plans = self.scheduler.plan_round(self.prefill_chunk)
-        emitted = self._decode_round(decodes)
-        for req, n in plans:
-            if req.state is not RequestState.PREFILL:
-                continue  # preempted resolving an earlier request's pressure
-            before = len(req.generated)
-            self._prefill_chunk_step(req, n)
-            emitted += len(req.generated) - before
-        self.rounds += 1
-        return emitted
+            decodes, plans = self.scheduler.plan_round(self.prefill_chunk)
+            emitted = self._decode_round(decodes)
+            for req, n in plans:
+                if req.state is not RequestState.PREFILL:
+                    continue  # preempted resolving an earlier req's pressure
+                before = len(req.generated)
+                self._prefill_chunk_step(req, n)
+                emitted += len(req.generated) - before
+            self.rounds += 1
+            return emitted
 
     # ----------------------------------------------------------------- run
 
@@ -364,10 +448,13 @@ class PagedServingEngine:
         return self.stats()
 
     def stats(self) -> Dict[str, Any]:
-        decoded = len(self.token_latencies_s)
+        """Aggregate serving stats — a read-time VIEW over the engine's
+        metrics registry (plus pager/scheduler state), not a parallel
+        store. `metrics.snapshot()` / `metrics.prometheus_text()` expose
+        the same registry for scraping."""
+        decoded = self._h_token.count
         agg_kv = sum(len(r.prompt) + len(r.generated) for r in self.finished)
         pool_tokens = self.pager.pool_tokens
-        ttft = [r.ttft_s for r in self.finished if r.ttft_s is not None]
         out = {
             "engine": "paged",
             "machine": get_machine().name,
@@ -398,12 +485,12 @@ class PagedServingEngine:
             "prefill_s": round(self.prefill_s, 3),
             "decode_s": round(self.decode_s, 3),
             "decode_tok_per_s": round(decoded / max(self.decode_s, 1e-9), 1),
-            "ttft_p50_ms": latency_report(ttft)["p50_ms"],
-            "ttft_p99_ms": latency_report(ttft)["p99_ms"],
-            "tbt_p50_ms": latency_report(self.tbt_s)["p50_ms"],
-            "tbt_p99_ms": latency_report(self.tbt_s)["p99_ms"],
+            "ttft_p50_ms": latency_report(self._h_ttft.samples)["p50_ms"],
+            "ttft_p99_ms": latency_report(self._h_ttft.samples)["p99_ms"],
+            "tbt_p50_ms": latency_report(self._h_tbt.samples)["p50_ms"],
+            "tbt_p99_ms": latency_report(self._h_tbt.samples)["p99_ms"],
         }
-        out.update(latency_report(self.token_latencies_s))
+        out.update(latency_report(self._h_token.samples))
         if self.finished:
             out["sample_tokens"] = self.finished[0].generated[:8]
         return out

@@ -39,6 +39,7 @@ import enum
 from collections import deque
 from typing import Callable, Deque, FrozenSet, List, Optional, Sequence, Tuple
 
+from repro.obs import trace as obs_trace
 from repro.serve.kv_pager import KVPager, PoolExhausted
 from repro.serve.prefix_cache import MISS, PrefixMatch
 
@@ -165,6 +166,10 @@ class ContinuousBatchingScheduler:
         if not victims:
             return False
         victim = max(victims, key=lambda r: r.admit_seq)
+        # preemption is rare enough to fetch the tracer per event
+        obs_trace.get_tracer().instant("preempt", rid=victim.rid,
+                                       kv_len=victim.kv_len,
+                                       state=victim.state.value)
         self.pager.free(victim.rid)
         victim.kv_len = 0
         victim.prefill_pos = 0

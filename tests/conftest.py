@@ -17,14 +17,18 @@ def rng():
 
 @pytest.fixture(autouse=True)
 def _reset_machine_and_autotune():
-    """Isolate tests from each other's feedback state: clear autotune samples
-    and re-resolve the machine profile from the environment (tests that call
-    set_machine(...) or record_transfer(...) must not leak into neighbours)."""
+    """Isolate tests from each other's feedback state: clear autotune samples,
+    re-resolve the machine profile from the environment, and reset the
+    observability layer (tests that call set_machine(...), record_transfer(...)
+    or obs.set_enabled(...) must not leak into neighbours)."""
+    import repro.obs as obs
     from repro.core import autotune
     from repro.core.machine import set_machine
 
     autotune.clear_samples()
     set_machine(None)
+    obs.reset()
     yield
     autotune.clear_samples()
     set_machine(None)
+    obs.reset()
