@@ -63,6 +63,9 @@ print(f"ok: metrics snapshot covers {len(kernels)} kernels; "
 EOF
 rm -f "$bench_out"
 
+echo "== chaos smoke: seeded fault schedule, every request must go terminal =="
+python scripts/chaos_serve.py --seed 0 --rounds 50
+
 echo "== machine smoke: far-memory profile must solve strictly deeper =="
 near_json="$(python scripts/machine_smoke.py)"
 far_json="$(REPRO_MACHINE=v5e-far-800ns python scripts/machine_smoke.py)"

@@ -85,7 +85,8 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
           greedy: bool = True, ctx=NULL_CTX, layout: str = "default",
           engine: str = "dense", block_size: int = 16,
           num_blocks: int | None = None, prefix_cache: bool = True,
-          prefill_chunk: int = 32):
+          prefill_chunk: int = 32, deadline_s: float | None = None,
+          chaos: int | None = None):
     if layout == "serving":
         from repro.runtime.layouts import serving_config_overrides
         cfg = cfg.replace(**serving_config_overrides())
@@ -94,7 +95,11 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
         return serve_paged(cfg, batch=batch, prompt_len=prompt_len, gen=gen,
                            seed=seed, ctx=ctx, block_size=block_size,
                            num_blocks=num_blocks, prefix_cache=prefix_cache,
-                           prefill_chunk=prefill_chunk)
+                           prefill_chunk=prefill_chunk, deadline_s=deadline_s,
+                           chaos=chaos)
+    if deadline_s is not None or chaos is not None:
+        raise ValueError("--deadline-s / --chaos need --engine paged (the "
+                         "dense baseline has no per-request lifecycle)")
     model = build_model(cfg, ctx)
     params = model.init(jax.random.PRNGKey(seed))
     rng = np.random.default_rng(seed)
@@ -135,13 +140,18 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
 def serve_paged(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
                 ctx=NULL_CTX, block_size: int = 16,
                 num_blocks: int | None = None, prefix_cache: bool = True,
-                prefill_chunk: int = 32):
+                prefill_chunk: int = 32, deadline_s: float | None = None,
+                chaos: int | None = None):
     """Continuous batching: `batch` requests with ragged prompt lengths
     (4x spread) through a block pool sized to force page reuse. Half the
     requests share a system-prompt prefix so the prefix cache (when on) has
-    something to dedup."""
-    from repro.serve import PagedServingEngine
+    something to dedup. `deadline_s` bounds each request's wall clock;
+    `chaos` seeds a deterministic fault schedule (serve.FaultInjector) so
+    the run doubles as a robustness drill — the stats then report how many
+    requests degraded (cancelled/failed/stalled) instead of completing."""
+    from repro.serve import FaultInjector, PagedServingEngine
 
+    faults = FaultInjector(chaos) if chaos is not None else None
     rng = np.random.default_rng(seed)
     lo = max(1, prompt_len // 4)
     plens = [int(x) for x in rng.integers(lo, prompt_len + 1, batch)]
@@ -157,7 +167,8 @@ def serve_paged(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
     eng = PagedServingEngine(cfg, ctx, block_size=block_size,
                              num_blocks=num_blocks, seed=seed,
                              prefix_cache=prefix_cache,
-                             prefill_chunk=prefill_chunk)
+                             prefill_chunk=prefill_chunk,
+                             deadline_s=deadline_s, faults=faults)
     for i, plen in enumerate(plens):
         body = rng.integers(0, cfg.vocab, plen)
         if i % 2 == 0:  # every other request opens with the system prompt
@@ -185,6 +196,14 @@ def main(argv=None):
                          "(paged engine; --no-prefix-cache disables)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="tokens per chunked-prefill step (paged engine)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline in seconds; "
+                         "expired requests are CANCELLED at the next round "
+                         "boundary (paged engine)")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="inject a deterministic fault schedule (pool "
+                         "exhaustion, reclaim refusal, step exceptions, "
+                         "latency spikes) seeded by SEED (paged engine)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="export the run's span trace as Chrome trace-event "
                          "JSON (open in https://ui.perfetto.dev)")
@@ -197,7 +216,8 @@ def main(argv=None):
                   gen=args.gen, layout=args.layout, engine=args.engine,
                   block_size=args.block_size, num_blocks=args.num_blocks,
                   prefix_cache=args.prefix_cache,
-                  prefill_chunk=args.prefill_chunk)
+                  prefill_chunk=args.prefill_chunk,
+                  deadline_s=args.deadline_s, chaos=args.chaos)
     if args.trace:
         stats["trace"] = obs_trace.get_tracer().export(args.trace)
         stats["trace_events"] = len(obs_trace.get_tracer().events)

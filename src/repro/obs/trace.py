@@ -24,7 +24,12 @@ Design constraints (ISSUE-8):
 Event vocabulary (Chrome trace-event phases):
 
   "X" complete span   - span(name, ...) context manager / complete(...)
-  "i" instant event   - instant(name, ...); thread-scoped ("s": "t")
+  "i" instant event   - instant(name, ...); thread-scoped ("s": "t").
+                        The serving failure model (ISSUE-9) emits its own
+                        vocabulary here: "shed", "cancel", "stall",
+                        "step_fault", "quarantine", "latency_spike", and
+                        "run_stalled", alongside the original "admit" /
+                        "cow_fork" / "cache_evict" / "preempt" events.
   "b"/"e" async pair  - begin_async/end_async(name, id): spans that outlive
                         one call frame (a request's whole lifetime)
 

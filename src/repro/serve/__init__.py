@@ -4,13 +4,16 @@
   prefix_cache - radix index: shared prompt prefixes -> shared KV pages
   prefill      - chunked prefill through the paged pipeline (pow2 jit cache)
   scheduler    - admit/evict/preempt; budgeted rounds mixing decode + chunks
+  faults       - seeded deterministic fault injection (chaos schedules)
   engine       - the serving loop wiring them together, streaming completions
 """
 from repro.serve.engine import PagedServingEngine, latency_report
+from repro.serve.faults import NULL_INJECTOR, FaultInjector, InjectedFault
 from repro.serve.kv_pager import GARBAGE_BLOCK, KVPager, PoolExhausted
 from repro.serve.prefill import ChunkedPrefiller, bucket_len
 from repro.serve.prefix_cache import MISS, PrefixCache, PrefixMatch
 from repro.serve.scheduler import (
+    TERMINAL_STATES,
     ContinuousBatchingScheduler,
     Request,
     RequestState,
@@ -19,15 +22,19 @@ from repro.serve.scheduler import (
 __all__ = [
     "ChunkedPrefiller",
     "ContinuousBatchingScheduler",
+    "FaultInjector",
     "GARBAGE_BLOCK",
+    "InjectedFault",
     "KVPager",
     "MISS",
+    "NULL_INJECTOR",
     "PagedServingEngine",
     "PoolExhausted",
     "PrefixCache",
     "PrefixMatch",
     "Request",
     "RequestState",
+    "TERMINAL_STATES",
     "bucket_len",
     "latency_report",
 ]

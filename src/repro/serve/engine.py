@@ -29,6 +29,23 @@ workload routinely exceeds what the same HBM held as a dense
 ``[batch, max_len]`` cache — `stats()["kv_oversubscription"]` reports the
 ratio.
 
+Failure model (ISSUE-9, DESIGN.md §2.6): every submitted request reaches a
+terminal state — FINISHED, CANCELLED, or FAILED — no matter what the pool,
+the steps, or the injected chaos (`serve/faults.py`) do. Per-request
+deadlines (`deadline_s`) cancel expired requests at round boundaries;
+`cancel(rid)` does the same on demand; a bounded admission queue
+(`max_queue`) sheds overflow at submit time (FAILED, reason "shed").
+`step_round` is exception-safe: a step that raises marks its requests
+faulted and retries them, quarantining any request whose consecutive-fault
+count exceeds `max_request_faults` (pages freed, trace span closed,
+`on_finish` invoked, state FAILED); unresolvable pool pressure
+(`PoolExhausted` escaping reclaim + preemption) requeues the request at
+the head of the waiting line and quarantines it after `max_stalls`
+attempts. `run()` never raises on a wedged workload: after `max_rounds`
+total or `max_idle_rounds` rounds of zero progress it cancels the
+remainder (reason "stalled") and returns partial stats with full
+stalled/failed/shed/deadline accounting.
+
 Observability (ISSUE-8, DESIGN.md §2.5): every engine instance owns one
 `obs.metrics` registry — the prefix/COW counters and the token-latency /
 TTFT / TBT histograms live there, and `stats()` is a read-time view over
@@ -58,7 +75,8 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import latency_report  # noqa: F401  (re-export; the
 #   one shared implementation lives in obs.metrics — ISSUE-8 satellite)
-from repro.serve.kv_pager import KVPager
+from repro.serve.faults import NULL_INJECTOR, FaultInjector
+from repro.serve.kv_pager import KVPager, PoolExhausted
 from repro.serve.prefill import ChunkedPrefiller
 from repro.serve.prefix_cache import MISS, PrefixCache, PrefixMatch
 from repro.serve.scheduler import (
@@ -80,7 +98,12 @@ class PagedServingEngine:
                  token_budget: Optional[int] = None,
                  params: Optional[Any] = None, seed: int = 0,
                  on_token: Optional[Callable[[Request, int], None]] = None,
-                 on_finish: Optional[Callable[[Request], None]] = None):
+                 on_finish: Optional[Callable[[Request], None]] = None,
+                 deadline_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 max_stalls: int = 8,
+                 max_request_faults: int = 3,
+                 faults: Optional[FaultInjector] = None):
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.cfg = cfg
@@ -93,7 +116,12 @@ class PagedServingEngine:
                 "path; the paged engine serves plain-attention archs")
         self.params = (params if params is not None
                        else self.model.init(jax.random.PRNGKey(seed)))
-        self.pager = KVPager(num_blocks, block_size)
+        self.faults = faults if faults is not None else NULL_INJECTOR
+        self.deadline_s = deadline_s
+        self.max_queue = max_queue
+        self.max_stalls = int(max_stalls)
+        self.max_request_faults = int(max_request_faults)
+        self.pager = KVPager(num_blocks, block_size, faults=self.faults)
         self.prefix_cache: Optional[PrefixCache] = (
             PrefixCache(self.pager) if prefix_cache else None)
         kh, hd, g = cfg.kv_heads, cfg.resolved_head_dim, cfg.n_heads // cfg.kv_heads
@@ -116,7 +144,8 @@ class PagedServingEngine:
                                 or self.round_width + self.prefill_chunk)
         self.scheduler = ContinuousBatchingScheduler(
             self.pager, self.round_width,
-            token_budget=self.token_budget, reclaim=self._reclaim)
+            token_budget=self.token_budget, reclaim=self._reclaim,
+            faults=self.faults)
         self.prefiller = ChunkedPrefiller(self.model, block_size)
 
         shape = (cfg.n_layers, self.pager.physical_blocks, block_size, kh, hd)
@@ -125,13 +154,15 @@ class PagedServingEngine:
 
         self.on_token = on_token
         self.on_finish = on_finish
-        self._requests: Dict[int, Request] = {}
+        self._requests: Dict[int, Request] = {}   # live (non-terminal) only
+        self._done: Dict[int, Request] = {}       # terminal, any reason
         self._next_rid = 0
         self._decode_fn = None                  # jit cache keyed by table width
         self._decode_fn_width = 0
         self._decode_fresh = False
+        self._tw_hw = 1    # padded-table high-water mark (re-jit guard)
         self.rounds = 0
-        self.finished: List[Request] = []
+        self.finished: List[Request] = []       # FINISHED (completed) only
 
         # one registry per engine instance (two engines in one process must
         # not mix counters); `stats()` is a view over it — ISSUE-8. The
@@ -149,6 +180,15 @@ class PagedServingEngine:
         self._h_token = m.histogram("serve.token_latency_s")
         self._h_tbt = m.histogram("serve.tbt_s")   # inter-token gaps
         self._h_ttft = m.histogram("serve.ttft_s")
+        # failure-model counters (ISSUE-9): terminal accounting in stats()
+        # is derived from the requests themselves (robust under
+        # REPRO_TELEMETRY=0); these feed the scrapeable registry
+        self._c_cancelled = m.counter("serve.cancelled")
+        self._c_failed = m.counter("serve.failed")
+        self._c_shed = m.counter("serve.shed")
+        self._c_deadline = m.counter("serve.deadline_expired")
+        self._c_stalls = m.counter("serve.stalls")
+        self._c_step_faults = m.counter("serve.step_faults")
 
     # ------------------------------------------------- registry views
     #
@@ -189,9 +229,18 @@ class PagedServingEngine:
 
     # -------------------------------------------------------------- intake
 
-    def submit(self, prompt_tokens, max_new_tokens: int) -> int:
+    def submit(self, prompt_tokens, max_new_tokens: int,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one request. Returns its id; results stream via callbacks
-        and land on `request(rid).generated`."""
+        and land on `request(rid).generated`.
+
+        `deadline_s` (relative seconds; the engine default applies when
+        None) bounds the request's wall-clock lifetime — past it, the
+        request is CANCELLED at the next round boundary. When the waiting
+        queue is full (`max_queue`), the request is **shed**: it still gets
+        an id, but it is immediately terminal (FAILED, reason "shed") and
+        `on_finish` fires — the caller distinguishes by state, not by
+        exception, so a bursty client never crashes the intake path."""
         prompt = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
         if not prompt:
             raise ValueError("empty prompt")
@@ -204,16 +253,106 @@ class PagedServingEngine:
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens))
         req.submit_s = time.perf_counter()
+        rel = deadline_s if deadline_s is not None else self.deadline_s
+        if rel is not None:
+            req.deadline_s = req.submit_s + float(rel)
         self._requests[rid] = req
-        self.scheduler.submit(req)
         self.tracer.begin_async("request", rid,
                                 tid=obs_trace.TID_REQUEST_BASE + rid,
                                 prompt_len=len(prompt),
                                 max_new_tokens=int(max_new_tokens))
+        if (self.max_queue is not None
+                and len(self.scheduler.waiting) >= self.max_queue):
+            self._c_shed.inc()
+            self.tracer.instant("shed", rid=rid,
+                                queued=len(self.scheduler.waiting))
+            self._retire(req, RequestState.FAILED, "shed")
+            return rid
+        self.scheduler.submit(req)
         return rid
 
     def request(self, rid: int) -> Request:
-        return self._requests[rid]
+        live = self._requests.get(rid)
+        return live if live is not None else self._done[rid]
+
+    def cancel(self, rid: int, *, reason: str = "cancelled") -> bool:
+        """Cancel a live request: pages freed, span closed, `on_finish`
+        invoked, terminal state CANCELLED. False if the id is unknown or
+        the request is already terminal (cancel is idempotent)."""
+        req = self._requests.get(rid)
+        if req is None:
+            return False
+        self._c_cancelled.inc()
+        if reason == "deadline":
+            self._c_deadline.inc()
+        self.tracer.instant("cancel", rid=rid, reason=reason,
+                            state=req.state.value)
+        self._retire(req, RequestState.CANCELLED, reason)
+        return True
+
+    # --------------------------------------------------- terminal plumbing
+
+    def _retire(self, req: Request, state: RequestState, reason: str,
+                error: Optional[str] = None) -> None:
+        """The one terminal transition every non-complete path routes
+        through: dequeue + free pages, stamp the reason, close the request
+        trace span, move the request to the retired map, fire
+        `on_finish`. Idempotent — a request already terminal is left be."""
+        if req.rid in self._done:
+            return
+        self.scheduler.retire(req, state)
+        req.finish_reason = reason
+        if error is not None:
+            req.error = error
+        self._requests.pop(req.rid, None)
+        self._done[req.rid] = req
+        self.tracer.end_async("request", req.rid,
+                              tid=obs_trace.TID_REQUEST_BASE + req.rid,
+                              generated=len(req.generated),
+                              state=state.value, reason=reason)
+        if self.on_finish:
+            self.on_finish(req)
+
+    def _quarantine(self, req: Request, err: BaseException, *,
+                    reason: str = "fault") -> None:
+        """Poisoned request: isolate it so the engine (and every other
+        request) survives. Pages freed, span closed, `on_finish` fired."""
+        self._c_failed.inc()
+        self.tracer.instant("quarantine", rid=req.rid, reason=reason,
+                            error=type(err).__name__)
+        self._retire(req, RequestState.FAILED, reason,
+                     error=f"{type(err).__name__}: {err}")
+
+    def _note_fault(self, req: Request, err: BaseException) -> None:
+        """A step serving `req` raised. Transient faults retry (the request
+        stays where it is); `max_request_faults` consecutive failures
+        quarantine it. The counter resets on any successful step."""
+        req.fault_count += 1
+        self._c_step_faults.inc()
+        self.tracer.instant("step_fault", rid=req.rid,
+                            count=req.fault_count,
+                            error=type(err).__name__)
+        if req.fault_count > self.max_request_faults:
+            self._quarantine(req, err)
+
+    def _stall(self, req: Request, err: BaseException) -> None:
+        """Pool pressure that reclaim + preemption could not resolve for
+        `req`: requeue it (recompute-on-readmit) and count the stall;
+        `max_stalls` of them quarantine it as unservable right now."""
+        req.stalls += 1
+        self._c_stalls.inc()
+        self.tracer.instant("stall", rid=req.rid, stalls=req.stalls)
+        if req.stalls > self.max_stalls:
+            self._quarantine(req, err, reason="pool_exhausted")
+        else:
+            self.scheduler.requeue(req)
+
+    def _expire_deadlines(self) -> None:
+        now = time.perf_counter()
+        expired = [r for r in self._requests.values()
+                   if r.deadline_s is not None and now >= r.deadline_s]
+        for req in expired:
+            self.cancel(req.rid, reason="deadline")
 
     # ------------------------------------------------------ prefix plumbing
 
@@ -231,6 +370,8 @@ class PagedServingEngine:
 
     def _reclaim(self, n_blocks: int, protect: FrozenSet[int]) -> int:
         """Scheduler pressure hook: drop LRU cache-only pages."""
+        if self.faults.fire("reclaim_refuse", requested=n_blocks):
+            return 0  # injected: every cold page is pinned right now
         if self.prefix_cache is None:
             return 0
         freed = len(self.prefix_cache.evict(n_blocks, protect))
@@ -261,6 +402,7 @@ class PagedServingEngine:
         n = min(n, len(ctxt) - start)
         if n <= 0:
             return
+        self.faults.check("prefill", rid=req.rid, start=start, n=n)
         # the chunk's first page may be shared (a partial-block prefix hit):
         # fork it before writing rows into it
         self._make_writable(req, start)
@@ -298,10 +440,15 @@ class PagedServingEngine:
             self.on_token(req, token)
 
     def _finish(self, req: Request) -> None:
-        """Retire one request: free its pages, close its lifecycle span,
-        and fold its TTFT into the registry histogram."""
+        """Retire one completed request: free its pages, close its
+        lifecycle span, and fold its TTFT into the registry histogram."""
+        if req.rid in self._done:
+            return  # a callback already cancelled it mid-step
         self.scheduler.finish(req)
+        req.finish_reason = "complete"
         self.finished.append(req)
+        self._requests.pop(req.rid, None)
+        self._done[req.rid] = req
         if req.ttft_s is not None:
             self._h_ttft.observe(req.ttft_s)
         self.tracer.end_async("request", req.rid,
@@ -331,25 +478,40 @@ class PagedServingEngine:
         return self._decode_fn
 
     def _table_width(self) -> int:
-        """Static block-table width: every request's table padded to the
-        worst case any submitted request can reach, so the jit is stable
-        across rounds of one workload."""
+        """Block-table width: every request's table padded to the worst
+        case any **live** request can reach, tracked as a high-water mark
+        so the decode jit key is stable across the rounds of one workload.
+        Terminal requests move out of `_requests`, so one long retired
+        request no longer pins the width (and the per-round staging
+        arrays) forever; the mark only drops once the live need falls to
+        half of it — a single short-lived dip never thrashes the jit."""
         need = max((self.pager.blocks_for(len(r.prompt) + r.max_new_tokens)
                     for r in self._requests.values()), default=1)
-        return max(need, 1)
+        need = max(need, 1)
+        if need > self._tw_hw:
+            self._tw_hw = need
+        elif need <= self._tw_hw // 2:
+            self._tw_hw = need
+        return self._tw_hw
 
     def _decode_round(self, active: List[Request]) -> int:
         """Decode one token for every (still-)running request in `active`."""
         # reserve pool room for each request's next token; reserving may
         # preempt later-admitted members of this same round, and writing
-        # mid-block may copy-on-write fork a page the prefix cache shares
+        # mid-block may copy-on-write fork a page the prefix cache shares.
+        # Pressure neither reclaim nor preemption can resolve stalls the
+        # request (requeue, bounded retries) instead of crashing the round.
         writable: List[Request] = []
         for req in active:
             if req.state is not RequestState.RUNNING:
                 continue  # preempted by an earlier reservation
-            pos = self.scheduler.reserve_decode_slot(req)
-            if req.state is RequestState.RUNNING:
-                self._make_writable(req, pos)
+            try:
+                pos = self.scheduler.reserve_decode_slot(req)
+                if req.state is RequestState.RUNNING:
+                    self._make_writable(req, pos)
+            except PoolExhausted as e:
+                self._stall(req, e)
+                continue
             writable.append(req)
         writable = [r for r in writable if r.state is RequestState.RUNNING]
         if not writable:
@@ -367,14 +529,28 @@ class PagedServingEngine:
             # the pre-write count (the new row's position)
             lengths[i] = self.pager.length(req.rid) - 1
 
-        decode = self._decode(tw)
         t0 = time.perf_counter()
-        with self.tracer.span("decode_round", width=len(writable),
-                              table_width=tw):
-            nxt, self.k_pools, self.v_pools = decode(
-                self.params, self.k_pools, self.v_pools,
-                jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lengths))
-            nxt = np.asarray(jax.block_until_ready(nxt))
+        try:
+            self.faults.check("decode", round=self.rounds,
+                              width=len(writable))
+            decode = self._decode(tw)
+            with self.tracer.span("decode_round", width=len(writable),
+                                  table_width=tw):
+                nxt, self.k_pools, self.v_pools = decode(
+                    self.params, self.k_pools, self.v_pools,
+                    jnp.asarray(tokens), jnp.asarray(tables),
+                    jnp.asarray(lengths))
+                nxt = np.asarray(jax.block_until_ready(nxt))
+        except Exception as e:
+            # the batched step raised: no KV row was written, so roll the
+            # reservations back and let every member retry next round —
+            # attribution inside a batch is ambiguous, so blame is shared
+            # and `max_request_faults` consecutive failures quarantine
+            for req in writable:
+                self.scheduler.unreserve(req)
+            for req in writable:
+                self._note_fault(req, e)
+            return 0
         dt = time.perf_counter() - t0
         self._c_decode_s.inc(dt)
 
@@ -398,6 +574,9 @@ class PagedServingEngine:
             autotune.record_transfer("paged_decode", dt / tiles)
 
         for i, req in enumerate(writable):
+            if req.state is not RequestState.RUNNING:
+                continue  # a callback cancelled it mid-round
+            req.fault_count = 0  # a successful step clears shared blame
             req.kv_len = self.pager.length(req.rid)
             self._emit(req, int(nxt[i]))
             self._h_token.observe(dt)
@@ -408,10 +587,18 @@ class PagedServingEngine:
     # --------------------------------------------------------------- round
 
     def step_round(self) -> int:
-        """One budgeted scheduler round: admit (with prefix lookup), decode
-        one token for every running request, then spend the leftover budget
-        on prefill chunks. Returns tokens emitted this round."""
+        """One budgeted scheduler round: expire deadlines, admit (with
+        prefix lookup), decode one token for every running request, then
+        spend the leftover budget on prefill chunks. Exception-safe: a
+        failing step faults (and eventually quarantines) the requests it
+        served, never the engine. Returns tokens emitted this round."""
         with self.tracer.span("round", n=self.rounds):
+            self._expire_deadlines()
+            spike = self.faults.latency_spike("latency")
+            if spike > 0.0:
+                self.tracer.instant("latency_spike",
+                                    sleep_ms=round(spike * 1e3, 3))
+                time.sleep(spike)
             for req in self.scheduler.admit(match=self._match):
                 self.tracer.instant("admit", rid=req.rid,
                                     matched=req.matched_len,
@@ -428,21 +615,43 @@ class PagedServingEngine:
                 if req.state is not RequestState.PREFILL:
                     continue  # preempted resolving an earlier req's pressure
                 before = len(req.generated)
-                self._prefill_chunk_step(req, n)
+                try:
+                    self._prefill_chunk_step(req, n)
+                    req.fault_count = 0
+                except PoolExhausted as e:
+                    self._stall(req, e)
+                except Exception as e:
+                    self._note_fault(req, e)
                 emitted += len(req.generated) - before
             self.rounds += 1
             return emitted
 
     # ----------------------------------------------------------------- run
 
-    def run(self, max_rounds: int = 100_000) -> Dict[str, Any]:
-        """Serve until every submitted request finishes. Returns stats."""
+    def run(self, max_rounds: int = 100_000, *,
+            max_idle_rounds: int = 64) -> Dict[str, Any]:
+        """Serve until every submitted request reaches a terminal state.
+
+        Never raises on a wedged workload: past `max_rounds` total — or
+        `max_idle_rounds` consecutive rounds with nothing in flight and
+        nothing admitted (a head request the pool can never hold) — the
+        remaining requests are cancelled (reason "stalled") and the stats
+        of the work that *did* complete are returned, with the stall/fail
+        accounting alongside."""
         rounds = 0
+        idle = 0
         while self.scheduler.has_work():
-            if rounds >= max_rounds:
-                raise RuntimeError(f"no convergence in {max_rounds} rounds")
-            self.step_round()
+            if rounds >= max_rounds or idle >= max_idle_rounds:
+                for req in list(self._requests.values()):
+                    self.cancel(req.rid, reason="stalled")
+                self.tracer.instant("run_stalled", rounds=rounds, idle=idle)
+                break
+            emitted = self.step_round()
             rounds += 1
+            if emitted == 0 and self.scheduler.in_flight() == 0:
+                idle += 1
+            else:
+                idle = 0
         self.pager.check_invariants(
             self.prefix_cache.block_refs() if self.prefix_cache else None)
         return self.stats()
@@ -455,11 +664,27 @@ class PagedServingEngine:
         decoded = self._h_token.count
         agg_kv = sum(len(r.prompt) + len(r.generated) for r in self.finished)
         pool_tokens = self.pager.pool_tokens
+        # terminal accounting straight off the retired requests themselves:
+        # correct even with the metrics registry nulled (REPRO_TELEMETRY=0)
+        by_state: Dict[RequestState, int] = {}
+        by_reason: Dict[str, int] = {}
+        for r in self._done.values():
+            by_state[r.state] = by_state.get(r.state, 0) + 1
+            by_reason[r.finish_reason] = by_reason.get(r.finish_reason, 0) + 1
         out = {
             "engine": "paged",
             "machine": get_machine().name,
-            "requests": len(self._requests),
+            "requests": self._next_rid,
+            "live": len(self._requests),
             "completed": len(self.finished),
+            "cancelled": by_state.get(RequestState.CANCELLED, 0),
+            "failed": by_state.get(RequestState.FAILED, 0),
+            "shed": by_reason.get("shed", 0),
+            "deadline_expired": by_reason.get("deadline", 0),
+            "stalled": by_reason.get("stalled", 0),
+            "stalls": int(self._c_stalls.value),
+            "step_faults": int(self._c_step_faults.value),
+            "faults_injected": self.faults.injected,
             "rounds": self.rounds,
             "preemptions": self.scheduler.preemptions,
             "round_width": self.round_width,

@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serve.faults import NULL_INJECTOR
+
 GARBAGE_BLOCK = 0
 
 
@@ -45,12 +47,14 @@ class KVPager:
     """Block pool allocator: alloc/append/share/fork/free with leak-proof
     refcounted accounting."""
 
-    def __init__(self, num_blocks: int, block_size: int):
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 faults=NULL_INJECTOR):
         if num_blocks < 1 or block_size < 1:
             raise ValueError(f"need >=1 blocks of >=1 tokens, got "
                              f"{num_blocks}x{block_size}")
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
+        self.faults = faults  # serve.faults hook ("pool_exhausted" site)
         # block ids 1..num_blocks; 0 is the reserved garbage page
         self._free = deque(range(1, self.num_blocks + 1))
         self._refcounts: Dict[int, int] = {}
@@ -108,6 +112,8 @@ class KVPager:
     # ----------------------------------------------------------- lifecycle
 
     def _pop_free(self) -> int:
+        if self.faults.fire("pool_exhausted", free=len(self._free)):
+            raise PoolExhausted("injected fault: pool_exhausted")
         if not self._free:
             raise PoolExhausted("no free block in the pool")
         b = self._free.popleft()
@@ -151,7 +157,19 @@ class KVPager:
                 f"{self.free_blocks} free")
         for b in prefix_blocks:
             self._refcounts[b] += 1
-        blocks = prefix_blocks + [self._pop_free() for _ in range(fresh)]
+        popped: List[int] = []
+        try:
+            for _ in range(fresh):
+                popped.append(self._pop_free())
+        except PoolExhausted:
+            # an injected fault can interrupt the claim mid-loop; roll the
+            # partial claim back so the failed alloc leaves no leak behind
+            for b in popped:
+                self.release(b)
+            for b in prefix_blocks:
+                self.release(b)
+            raise
+        blocks = prefix_blocks + popped
         self._tables[rid] = blocks
         self._lengths[rid] = int(n_tokens)
         return list(blocks)
@@ -170,6 +188,20 @@ class KVPager:
             self._tables[rid].append(self._pop_free())
         self._lengths[rid] = pos + 1
         return pos
+
+    def pop_token(self, rid: int) -> None:
+        """Undo the latest `append_token` — a reservation whose decode step
+        never ran (the round raised). Only valid immediately after the
+        reservation, before any other table mutation for `rid`: the block a
+        boundary-crossing append grew is still private, so releasing it
+        frees it."""
+        n = self._lengths[rid]
+        if n <= 0:
+            raise ValueError(f"request {rid} has no token to pop")
+        self._lengths[rid] = n - 1
+        table = self._tables[rid]
+        if len(table) > self.blocks_for(n - 1):
+            self.release(table.pop())
 
     def share(self, block: int) -> None:
         """Take an extra reference on an allocated block (prefix cache /

@@ -20,12 +20,24 @@ survive their owning request), `match` only reads, `evict` drops
 least-recently-hit leaf pages whose sole remaining reference is the cache —
 the engine calls it under pool pressure before resorting to preemption.
 
+Eviction order is kept in a lazy min-heap of ``(last_hit, seq, block)``
+entries (seq = node creation order, the tie-break the old full-scan's
+strict-< iteration implied): every touch pushes a fresh entry, pops skip
+entries whose node was re-touched, evicted, or is currently an interior
+node, and candidates that are merely *ineligible right now* (protected, or
+still referenced by a live table) are stashed and re-pushed so they stay
+candidates. Reclaim is therefore near-linear in pages actually examined
+instead of O(nodes x blocks) rescans — it sits on the pool-pressure
+critical path (ISSUE-9 satellite). A parent becomes reclaimable the moment
+its last child is evicted, at which point it is pushed back into the heap.
+
 A match never covers a whole prompt: at least one token is always left to
 prefill so the engine has logits to sample the first output token from.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.serve.kv_pager import KVPager
@@ -58,15 +70,16 @@ MISS = PrefixMatch([], 0)
 
 
 class _Node:
-    __slots__ = ("tokens", "block", "parent", "children", "last_hit")
+    __slots__ = ("tokens", "block", "parent", "children", "last_hit", "seq")
 
     def __init__(self, tokens: Tuple[int, ...], block: int,
-                 parent: Optional["_Node"]):
+                 parent: Optional["_Node"], seq: int):
         self.tokens = tokens
         self.block = block
         self.parent = parent
         self.children: Dict[Tuple[int, ...], "_Node"] = {}
         self.last_hit = 0
+        self.seq = seq  # creation order: the LRU heap's tie-break
 
 
 class PrefixCache:
@@ -77,6 +90,8 @@ class PrefixCache:
         self.block_size = pager.block_size
         self._children: Dict[Tuple[int, ...], _Node] = {}  # root level
         self._by_block: Dict[int, _Node] = {}
+        self._heap: List[Tuple[int, int, int]] = []  # (last_hit, seq, block)
+        self._seq = 0
         self._clock = 0
         self.lookups = 0
         self.evictions = 0
@@ -87,6 +102,17 @@ class PrefixCache:
     def _tick(self) -> int:
         self._clock += 1
         return self._clock
+
+    def _touch(self, node: _Node, now: int) -> None:
+        """Stamp a hit and push the node's fresh heap entry (lazy: the
+        previous entries go stale and are skipped at pop time)."""
+        node.last_hit = now
+        heapq.heappush(self._heap, (now, node.seq, node.block))
+        if len(self._heap) > max(64, 8 * len(self._by_block)):
+            # long-lived processes: compact the stale backlog in one pass
+            self._heap = [(n.last_hit, n.seq, n.block)
+                          for n in self._by_block.values()]
+            heapq.heapify(self._heap)
 
     # -------------------------------------------------------------- match
 
@@ -106,7 +132,7 @@ class PrefixCache:
             key = tuple(toks[covered:covered + blk])
             node = children.get(key) if len(key) == blk else None
             if node is not None:  # whole block matches: descend
-                node.last_hit = now
+                self._touch(node, now)
                 blocks.append(node.block)
                 covered += blk
                 children = node.children
@@ -121,7 +147,7 @@ class PrefixCache:
                 if n > best_n:
                     best, best_n = child, n
             if best is not None:
-                best.last_hit = now
+                self._touch(best, now)
                 blocks.append(best.block)
                 covered += best_n
             break
@@ -154,12 +180,13 @@ class PrefixCache:
                 block = int(table_blocks[i])
                 if block in self._by_block:
                     break  # page already backs another path; stop extending
-                node = _Node(key, block, parent)
+                node = _Node(key, block, parent, self._seq)
+                self._seq += 1
                 children[key] = node
                 self._by_block[block] = node
                 self.pager.share(block)
                 added += 1
-            node.last_hit = now
+            self._touch(node, now)
             parent = node
             children = node.children
         return added
@@ -171,25 +198,37 @@ class PrefixCache:
         """Free up to `n_blocks` pages: least-recently-hit leaves whose only
         remaining reference is the cache itself (never pages still in a
         live table, never `protect`). Evicting a leaf may expose its parent
-        as the next candidate. Returns the freed page ids."""
+        as the next candidate. Returns the freed page ids.
+
+        Heap-driven (see module docstring): pops the LRU candidate instead
+        of rescanning every node per freed block; ineligible-for-now
+        entries are stashed and re-pushed on exit."""
         evicted: List[int] = []
-        while len(evicted) < n_blocks:
-            best: Optional[_Node] = None
-            for node in self._by_block.values():
-                if node.children or node.block in protect:
-                    continue
-                if self.pager.refcount(node.block) != 1:
-                    continue  # a live request still reads this page
-                if best is None or node.last_hit < best.last_hit:
-                    best = node
-            if best is None:
-                break
-            siblings = best.parent.children if best.parent else self._children
-            del siblings[best.tokens]
-            del self._by_block[best.block]
-            self.pager.release(best.block)
-            evicted.append(best.block)
+        stash: List[Tuple[int, int, int]] = []
+        heap = self._heap
+        while heap and len(evicted) < n_blocks:
+            entry = heapq.heappop(heap)
+            t, seq, block = entry
+            node = self._by_block.get(block)
+            if node is None or node.seq != seq or node.last_hit != t:
+                continue  # stale: evicted, block reused, or re-touched
+            if node.children:
+                continue  # interior; re-pushed when its last child goes
+            if block in protect or self.pager.refcount(block) != 1:
+                stash.append(entry)  # ineligible now, still a candidate
+                continue
+            siblings = node.parent.children if node.parent else self._children
+            del siblings[node.tokens]
+            del self._by_block[block]
+            self.pager.release(block)
+            evicted.append(block)
             self.evictions += 1
+            parent = node.parent
+            if parent is not None and not parent.children:
+                heapq.heappush(heap, (parent.last_hit, parent.seq,
+                                      parent.block))
+        for entry in stash:
+            heapq.heappush(heap, entry)
         return evicted
 
     # -------------------------------------------------------------- misc

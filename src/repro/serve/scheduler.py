@@ -9,10 +9,25 @@ capped by the context the scratchpad can hold".
 
 States:
 
-  WAITING  - queued; admitted when the pool can hold its prompt
-  PREFILL  - blocks allocated, prompt KV being written chunk by chunk
-  RUNNING  - prefill complete, decoded every round
-  FINISHED - done; block references returned to the pool
+  WAITING   - queued; admitted when the pool can hold its prompt
+  PREFILL   - blocks allocated, prompt KV being written chunk by chunk
+  RUNNING   - prefill complete, decoded every round
+  FINISHED  - done; block references returned to the pool
+  CANCELLED - terminal without completing: caller `cancel`, deadline
+              expiry, or the engine aborting a stalled drain (ISSUE-9)
+  FAILED    - terminal on error: a poisoned step quarantined the request,
+              unresolvable pool pressure, or shed at an overflowing queue
+
+Admission reserves copy-on-write headroom: a prefix match that ends
+mid-block will fork the shared partial page on its very first suffix
+write, so `admit` requires one spare free block beyond the fresh suffix
+blocks whenever ``matched_tokens % block_size != 0`` — without it the
+fork's `PoolExhausted` fires after the pages are claimed, when the matched
+pages are refcounted >= 2 (unevictable) and there may be nobody left to
+preempt. If even reclaiming around the *protected* match pages cannot
+cover the need, the match itself is sacrificed: reclaim runs unprotected,
+the prompt is re-matched against whatever survived, and admission retries
+as a (partial or full) miss.
 
 Rounds mix work under a **token budget** (`plan_round`): every running
 request decodes one token (decode is never starved by prefill), and the
@@ -40,6 +55,7 @@ from collections import deque
 from typing import Callable, Deque, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.obs import trace as obs_trace
+from repro.serve.faults import NULL_INJECTOR
 from repro.serve.kv_pager import KVPager, PoolExhausted
 from repro.serve.prefix_cache import MISS, PrefixMatch
 
@@ -49,6 +65,12 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     RUNNING = "running"
     FINISHED = "finished"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+
+TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
+                             RequestState.FAILED})
 
 
 @dataclasses.dataclass
@@ -68,6 +90,12 @@ class Request:
     submit_s: float = 0.0            # wall clock at submit (engine stamps)
     first_token_s: Optional[float] = None
     last_emit_s: Optional[float] = None
+    deadline_s: Optional[float] = None  # absolute perf_counter deadline
+    stalls: int = 0                  # unresolvable-pressure requeues
+    fault_count: int = 0             # consecutive failed steps (engine)
+    error: Optional[str] = None      # what quarantined it (FAILED only)
+    finish_reason: Optional[str] = None  # complete / cancelled / deadline /
+    #                                      shed / stalled / fault / ...
 
     @property
     def context(self) -> List[int]:
@@ -77,6 +105,10 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -97,7 +129,8 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, pager: KVPager, max_in_flight: int, *,
                  token_budget: Optional[int] = None,
-                 reclaim: Optional[ReclaimFn] = None):
+                 reclaim: Optional[ReclaimFn] = None,
+                 faults=NULL_INJECTOR):
         if max_in_flight < 1:
             raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
         if token_budget is not None and token_budget < 1:
@@ -106,6 +139,7 @@ class ContinuousBatchingScheduler:
         self.max_in_flight = int(max_in_flight)
         self.token_budget = token_budget
         self.reclaim = reclaim
+        self.faults = faults  # serve.faults hook ("preempt_refuse" site)
         self.waiting: Deque[Request] = deque()
         self.prefilling: List[Request] = []
         self.running: List[Request] = []
@@ -126,6 +160,19 @@ class ContinuousBatchingScheduler:
 
     # ---------------------------------------------------------- admission
 
+    def _blocks_needed(self, ctxt: Sequence[int], m: PrefixMatch) -> int:
+        """Free blocks an admission must see: the fresh suffix blocks, plus
+        one spare when the match ends mid-block — the request's first
+        suffix write copy-on-write forks that shared partial page, and the
+        fork must not be left to fail *after* the pages are claimed (the
+        matched page is then refcounted >= 2, hence unevictable, and with
+        no other in-flight request there is nobody to preempt — the
+        reproduced ISSUE-9 crash)."""
+        fresh = self.pager.blocks_for(len(ctxt)) - len(m.blocks)
+        if m.n_tokens % self.pager.block_size:
+            fresh += 1
+        return fresh
+
     def admit(self, match: Optional[MatchFn] = None) -> List[Request]:
         """Move waiting requests to PREFILL while the round has slots and
         the pool can hold their context. `match` (the engine's prefix-cache
@@ -139,15 +186,26 @@ class ContinuousBatchingScheduler:
             req = self.waiting[0]
             ctxt = req.context
             m = match(ctxt) if match is not None else MISS
-            fresh = self.pager.blocks_for(len(ctxt)) - len(m.blocks)
-            shortfall = fresh - self.pager.free_blocks
-            if shortfall > 0 and self.reclaim is not None:
-                self.reclaim(shortfall, frozenset(m.blocks))
-            if fresh > self.pager.free_blocks:
+            need = self._blocks_needed(ctxt, m)
+            if need > self.pager.free_blocks and self.reclaim is not None:
+                self.reclaim(need - self.pager.free_blocks,
+                             frozenset(m.blocks))
+                if need > self.pager.free_blocks and m.hit:
+                    # the only reclaimable pages may be the protected match
+                    # itself: give the match up, reclaim unprotected, and
+                    # re-match against whatever survived
+                    if self.reclaim(need - self.pager.free_blocks,
+                                    frozenset()):
+                        m = match(ctxt) if match is not None else MISS
+                        need = self._blocks_needed(ctxt, m)
+            if need > self.pager.free_blocks:
                 break
+            try:
+                self.pager.alloc(req.rid, len(ctxt),
+                                 prefix_blocks=m.blocks, prefix_len=m.n_tokens)
+            except PoolExhausted:
+                break  # injected fault mid-claim; retry next round
             self.waiting.popleft()
-            self.pager.alloc(req.rid, len(ctxt),
-                             prefix_blocks=m.blocks, prefix_len=m.n_tokens)
             req.kv_len = len(ctxt)
             req.prefill_pos = m.n_tokens
             req.matched_len = m.n_tokens
@@ -162,6 +220,8 @@ class ContinuousBatchingScheduler:
 
     def _preempt_one(self, protect: Request) -> bool:
         """Evict the latest-admitted in-flight request other than `protect`."""
+        if self.faults.fire("preempt_refuse", protect=protect.rid):
+            return False  # injected: the victim is unpreemptable right now
         victims = [r for r in self.prefilling + self.running if r is not protect]
         if not victims:
             return False
@@ -170,18 +230,33 @@ class ContinuousBatchingScheduler:
         obs_trace.get_tracer().instant("preempt", rid=victim.rid,
                                        kv_len=victim.kv_len,
                                        state=victim.state.value)
-        self.pager.free(victim.rid)
-        victim.kv_len = 0
-        victim.prefill_pos = 0
-        victim.state = RequestState.WAITING
         victim.preemptions += 1
         self.preemptions += 1
-        if victim in self.running:
-            self.running.remove(victim)
-        else:
-            self.prefilling.remove(victim)
-        self.waiting.appendleft(victim)
+        self.requeue(victim)
         return True
+
+    def requeue(self, req: Request) -> None:
+        """Push an in-flight request back to the head of the waiting line
+        (recompute-on-readmit): drop its page references and reset its
+        prefill progress; everything generated so far is kept. Used by
+        preemption and by the engine's stall path (unresolvable pressure)."""
+        if self.pager.owns(req.rid):
+            self.pager.free(req.rid)
+        req.kv_len = 0
+        req.prefill_pos = 0
+        req.state = RequestState.WAITING
+        if req in self.running:
+            self.running.remove(req)
+        elif req in self.prefilling:
+            self.prefilling.remove(req)
+        if req not in self.waiting:
+            self.waiting.appendleft(req)
+
+    def unreserve(self, req: Request) -> None:
+        """Roll back `reserve_decode_slot` for a decode step that never
+        executed (the round raised after reservations were made)."""
+        if req.state is RequestState.RUNNING and self.pager.owns(req.rid):
+            self.pager.pop_token(req.rid)
 
     def _under_pressure(self, req: Request, fn):
         """Run a pager operation, resolving `PoolExhausted` by reclaiming a
@@ -248,9 +323,21 @@ class ContinuousBatchingScheduler:
         self.running.append(req)
 
     def finish(self, req: Request) -> None:
-        self.pager.free(req.rid)
-        req.state = RequestState.FINISHED
+        self.retire(req, RequestState.FINISHED)
+
+    def retire(self, req: Request,
+               state: RequestState = RequestState.FINISHED) -> None:
+        """Terminal transition from *any* queue (or none — a shed request
+        never entered one): drop the request's page references and remove
+        it from whichever collection holds it. `state` must be terminal."""
+        if state not in TERMINAL_STATES:
+            raise ValueError(f"retire needs a terminal state, got {state}")
+        if self.pager.owns(req.rid):
+            self.pager.free(req.rid)
+        req.state = state
         if req in self.running:
             self.running.remove(req)
-        else:
+        elif req in self.prefilling:
             self.prefilling.remove(req)
+        elif req in self.waiting:
+            self.waiting.remove(req)

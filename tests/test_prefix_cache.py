@@ -105,6 +105,101 @@ def test_prefix_evict_lru_leaves_and_protect():
     assert pager.free_blocks == pager.num_blocks
 
 
+def _evict_scan_reference(cache, n_blocks, protect=frozenset()):
+    """The pre-heap O(nodes x blocks) eviction, kept verbatim as the oracle
+    for the lazy-heap rewrite (ISSUE-9 satellite): min last_hit under
+    strict <, ties broken by `_by_block` iteration (= node creation) order,
+    skipping interior / protected / still-referenced pages."""
+    evicted = []
+    while len(evicted) < n_blocks:
+        best = None
+        for node in cache._by_block.values():
+            if node.children or node.block in protect:
+                continue
+            if cache.pager.refcount(node.block) != 1:
+                continue
+            if best is None or node.last_hit < best.last_hit:
+                best = node
+        if best is None:
+            break
+        siblings = best.parent.children if best.parent else cache._children
+        del siblings[best.tokens]
+        del cache._by_block[best.block]
+        cache.pager.release(best.block)
+        evicted.append(best.block)
+        cache.evictions += 1
+    return evicted
+
+
+def _parity_ops(n=140, seed=321):
+    """A deterministic alloc/free/match/evict schedule over a tiny vocab so
+    prefixes collide and partially diverge all over the tree."""
+    rng = np.random.RandomState(seed)
+    header = [int(v) for v in rng.choice(8, size=12)]
+    ops, rid = [], 0
+    for _ in range(n):
+        r = rng.rand()
+        toks = [int(v) for v in rng.choice(8, size=int(rng.randint(4, 20)))]
+        if rng.rand() < 0.5:
+            k = min(len(toks) - 1, 8)
+            toks[:k] = header[:k]
+        if r < 0.45:
+            ops.append(("alloc", rid, toks))
+            rid += 1
+        elif r < 0.62 and rid:
+            ops.append(("free", int(rng.randint(rid))))
+        elif r < 0.8:
+            ops.append(("match", toks))
+        else:
+            ops.append(("evict", int(rng.randint(1, 5)),
+                        int(rng.randint(3))))
+    return ops
+
+
+def _apply_parity_ops(ops, evict_fn):
+    pager = KVPager(num_blocks=32, block_size=4)
+    cache = PrefixCache(pager)
+    live = set()
+    results = []
+    for op in ops:
+        if op[0] == "alloc":
+            _, rid, toks = op
+            if pager.can_alloc(len(toks)):
+                pager.alloc(rid, len(toks))
+                live.add(rid)
+                cache.insert(toks, pager.block_table(rid))
+        elif op[0] == "free":
+            if op[1] in live:
+                pager.free(op[1])
+                live.remove(op[1])
+        elif op[0] == "match":
+            cache.match(op[1])
+        else:
+            _, n, mod = op
+            protect = frozenset(b for b in cache._by_block if b % 3 == mod)
+            results.append(tuple(evict_fn(cache, n, protect)))
+        pager.check_invariants(cache.block_refs())
+    for rid in sorted(live):
+        pager.free(rid)
+    results.append(tuple(evict_fn(cache, 99, frozenset())))
+    pager.check_invariants(cache.block_refs())
+    return results, sorted(cache._by_block)
+
+
+def test_evict_heap_matches_reference_scan_order():
+    """Satellite 3 parity: the lazy-heap eviction must pick the exact pages
+    in the exact order the old full-scan did, through an interleaved
+    randomized schedule (including mid-schedule protected evictions and a
+    final drain)."""
+    ops = _parity_ops()
+    heap_res, heap_left = _apply_parity_ops(
+        ops, lambda c, n, p: c.evict(n, p))
+    ref_res, ref_left = _apply_parity_ops(ops, _evict_scan_reference)
+    assert heap_res == ref_res
+    assert heap_left == ref_left
+    assert any(any(r) for r in heap_res)  # the schedule actually evicted
+
+
 def test_prefix_evict_skips_pages_still_in_live_tables():
     pager, cache = _pager_cache()
     t0 = pager.alloc(0, 8)
