@@ -21,7 +21,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import csv_table, timed
-from repro.core import autotune
+from repro.core import autotune, guard
 from repro.core.descriptors import plan_gather
 from repro.core.machine import get_machine
 from repro.core.schedule import TileProfile, solve_depth, achieved_bandwidth
@@ -296,6 +296,11 @@ def json_report() -> dict:
     its observed per-tile time against the active `MachineModel`), and the
     report embeds the default `obs.metrics` registry snapshot — the
     real-v5e measurement run reads hardware truth through this one report.
+
+    ISSUE-10: the top-level `substrate` section is `core.guard.stats()` —
+    guarded vs clean call counts, backoffs, fallbacks, parity checks. Under
+    `--strict` a clean bench must show zero backoffs/fallbacks (the CI lane
+    asserts it); anything else means the substrate degraded silently.
     """
     from repro.obs import metrics as obs_metrics
 
@@ -320,6 +325,7 @@ def json_report() -> dict:
             "breakdown": t.get("breakdown"),
         }
     return {"machine": m.name, "profile": m.summary(), "kernels": kernels,
+            "substrate": guard.stats(),
             "metrics": obs_metrics.default_registry().snapshot()}
 
 
@@ -349,7 +355,13 @@ def main(argv=None):
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="export the bench run's span trace as Chrome "
                          "trace-event JSON (open in https://ui.perfetto.dev)")
+    ap.add_argument("--strict", action="store_true",
+                    help="disable substrate degradation: any kernel "
+                         "backoff/fallback/parity mismatch raises its typed "
+                         "SubstrateError instead (CI parity lanes)")
     args = ap.parse_args(argv)
+    if args.strict:
+        guard.set_strict(True)
     if args.json:
         print(json.dumps(json_report(), indent=2))
     else:

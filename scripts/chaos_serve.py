@@ -5,7 +5,9 @@ Drives a randomized workload (ragged prompts, shared system-prompt
 prefixes with mid-block divergence, staggered arrivals, tight pool) under
 a deterministic `serve.FaultInjector` schedule — pool exhaustion, reclaim
 refusal, preemption refusal, injected decode/prefill exceptions, latency
-spikes — and asserts after EVERY round that
+spikes, and the ISSUE-10 kernel-substrate sites (compile failure, VMEM
+exhaustion, NaN poisoning, handled by `core.guard`'s backoff ladder and
+twin fallback) — and asserts after EVERY round that
 
   * `KVPager.check_invariants` holds (free xor refcounted, exact
     refcounts, no garbage-page allocation), and
@@ -13,8 +15,11 @@ spikes — and asserts after EVERY round that
 
 At drain it asserts every submitted request landed in a terminal state
 (FINISHED / CANCELLED / FAILED) — the ISSUE-9 guarantee: the former
-pool-pressure crash class is now a tested property. Exits non-zero (an
-AssertionError) on any violation; prints a JSON summary on success.
+pool-pressure crash class is now a tested property — and that the parity
+sentinel (forced on, `REPRO_PARITY=sampled`) recorded ZERO kernel/twin
+mismatches: kernel faults may degrade throughput, never answers
+(ISSUE-10). Exits non-zero (an AssertionError) on any violation; prints a
+JSON summary (including `core.guard` substrate stats) on success.
 
   PYTHONPATH=src python scripts/chaos_serve.py --seed 0 --rounds 50
 """
@@ -27,7 +32,13 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# chaos runs police kernel/twin parity: must be set before repro imports so
+# core.guard resolves the mode at module init
+os.environ.setdefault("REPRO_PARITY", "sampled")
+
 import numpy as np  # noqa: E402
+
+from repro.core import guard  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.serve import (  # noqa: E402
@@ -115,6 +126,11 @@ def main(argv=None) -> int:
     accounted = (stats["completed"] + stats["cancelled"] + stats["failed"])
     assert accounted == len(rids), (accounted, len(rids), stats)
 
+    # the ISSUE-10 guarantee: whatever the kernel sites injected, every
+    # answer the substrate produced agrees with its jnp twin
+    substrate = guard.stats()
+    assert substrate["parity_mismatches"] == 0, substrate
+
     summary = {
         "seed": args.seed,
         "rounds": stats["rounds"],
@@ -129,6 +145,7 @@ def main(argv=None) -> int:
         "step_faults": stats["step_faults"],
         "preemptions": stats["preemptions"],
         "faults": eng.faults.stats(),
+        "substrate": substrate,
     }
     print(json.dumps(summary))
     return 0

@@ -66,6 +66,41 @@ rm -f "$bench_out"
 echo "== chaos smoke: seeded fault schedule, every request must go terminal =="
 python scripts/chaos_serve.py --seed 0 --rounds 50
 
+echo "== guard smoke: kernel-site chaos under parity sentinels (ISSUE-10) =="
+guard_out="$(mktemp /tmp/repro_guard.XXXXXX.json)"
+REPRO_PARITY=sampled python scripts/chaos_serve.py --seed 3 --rounds 40 > "$guard_out"
+python - "$guard_out" <<'EOF'
+import json, sys
+s = json.load(open(sys.argv[1]))
+sub = s["substrate"]
+by_site = s["faults"]["by_site"]
+hits = sum(by_site.get(k, 0)
+           for k in ("kernel_compile", "kernel_oom", "kernel_nan"))
+assert hits > 0, f"chaos never hit a kernel site (pick a new seed): {by_site}"
+assert sub["parity_mismatches"] == 0, sub
+assert sub["injected_faults"] > 0, sub
+print(f"ok: {hits} kernel-site faults absorbed, "
+      f"{sub['parity_checks']} parity checks, 0 mismatches")
+EOF
+rm -f "$guard_out"
+
+echo "== strict smoke: clean kernel bench under --strict must never degrade =="
+strict_out="$(mktemp /tmp/repro_strict.XXXXXX.json)"
+PYTHONPATH="$PYTHONPATH:." REPRO_PARITY=full \
+    python -m benchmarks.kernel_bench --json --strict > "$strict_out"
+python - "$strict_out" <<'EOF'
+import json, sys
+sub = json.load(open(sys.argv[1]))["substrate"]
+assert sub["strict"], sub
+assert sub["guarded_calls"] > 0, "bench made no guarded coro_calls"
+assert sub["guarded_calls"] == sub["clean_calls"], sub
+for k in ("backoffs", "fallbacks", "parity_mismatches", "breaker_trips"):
+    assert sub[k] == 0, f"clean strict run degraded: {k}={sub[k]} ({sub})"
+print(f"ok: {sub['guarded_calls']} guarded calls, all clean, "
+      f"{sub['parity_checks']} full-parity checks under --strict")
+EOF
+rm -f "$strict_out"
+
 echo "== machine smoke: far-memory profile must solve strictly deeper =="
 near_json="$(python scripts/machine_smoke.py)"
 far_json="$(REPRO_MACHINE=v5e-far-800ns python scripts/machine_smoke.py)"

@@ -62,8 +62,12 @@ from repro.obs.metrics import percentile
 __all__ = [
     "TileProfile",
     "choose_depth",
+    "clear_quarantine",
     "clear_samples",
+    "is_quarantined",
     "last_choice",
+    "quarantine_config",
+    "quarantined_depths",
     "last_profile",
     "observe_pipeline",
     "profile_decode",
@@ -93,6 +97,9 @@ _last_choice: Dict[Tuple[str, str], int] = {}
 _last_mode: Dict[Tuple[str, str], str] = {}       # "static" | "adaptive"
 _last_profile: Dict[Tuple[str, str], TileProfile] = {}  # for obs.breakdown
 _warmed: Set[Tuple[str, str, int]] = set()        # (machine, kernel, n_tiles)
+# known-bad configs (ISSUE-10): depths that failed under core.guard's ladder;
+# choose_depth never re-proposes one (it halves past them, like the ladder)
+_quarantined: Set[Tuple[str, str, int]] = set()   # (machine, kernel, depth)
 _telemetry_on: bool = os.environ.get(TELEMETRY_ENV, "1") not in ("0", "off")
 
 
@@ -202,6 +209,7 @@ def clear_samples(kernel: Optional[str] = None) -> None:
             _last_mode.clear()
             _last_profile.clear()
             _warmed.clear()
+            _quarantined.clear()
         else:
             k = _key(kernel)
             _transfer_samples.pop(k, None)
@@ -210,6 +218,55 @@ def clear_samples(kernel: Optional[str] = None) -> None:
             _last_profile.pop(k, None)
             _warmed.difference_update(
                 {w for w in _warmed if w[:2] == k})
+            _quarantined.difference_update(
+                {q for q in _quarantined if q[:2] == k})
+
+
+# ------------------------------------------------------- config quarantine
+#
+# core.guard pushes every (machine, kernel, depth) that failed its ladder
+# here; the decision path below halves past quarantined depths so a config
+# that just crashed is never re-proposed (ISSUE-10).
+
+
+def quarantine_config(kernel: str, depth: int,
+                      machine: Optional[MachineModel] = None) -> None:
+    """Mark (machine, kernel, depth) as known-bad."""
+    with _lock:
+        _quarantined.add((*_key(kernel, machine), int(depth)))
+
+
+def is_quarantined(kernel: str, depth: int,
+                   machine: Optional[MachineModel] = None) -> bool:
+    with _lock:
+        return (*_key(kernel, machine), int(depth)) in _quarantined
+
+
+def quarantined_depths(kernel: str,
+                       machine: Optional[MachineModel] = None) -> List[int]:
+    k = _key(kernel, machine)
+    with _lock:
+        return sorted(d for (m, kn, d) in _quarantined if (m, kn) == k)
+
+
+def clear_quarantine(kernel: Optional[str] = None) -> None:
+    """Forget known-bad configs for one kernel (active machine) or all."""
+    with _lock:
+        if kernel is None:
+            _quarantined.clear()
+        else:
+            k = _key(kernel)
+            _quarantined.difference_update(
+                {q for q in _quarantined if q[:2] == k})
+
+
+def _avoid_quarantined(machine_name: str, kernel: str, depth: int) -> int:
+    """Halve past quarantined depths, mirroring the guard's backoff ladder
+    (so the solver's proposal and the ladder's landing spot agree)."""
+    d = int(depth)
+    while d > 1 and (machine_name, kernel, d) in _quarantined:
+        d = max(1, d // 2)
+    return d
 
 
 def last_choice(kernel: str) -> Optional[int]:
@@ -287,6 +344,10 @@ def telemetry_summary() -> Dict[str, Any]:
     This summary is also served as the ``autotune`` view of
     `obs.metrics.default_registry()`, so one registry snapshot covers the
     engine counters and the kernel feedback loop alike.
+
+    The ``substrate`` section (ISSUE-10) folds in `core.guard.stats()` —
+    guarded-vs-clean call counts, backoffs, fallbacks, parity mismatches,
+    open breakers — plus the active machine's quarantined configs.
     """
     from repro.obs import breakdown as breakdown_mod  # local: obs ties back
 
@@ -312,6 +373,11 @@ def telemetry_summary() -> Dict[str, Any]:
                     entry["breakdown"] = breakdown_mod.attribute(
                         prof, _last_choice.get(key), p50_s, machine=m)
             out["kernels"][kernel] = entry
+        quarantined = sorted(q for q in _quarantined if q[0] == m.name)
+    from repro.core import guard  # local: guard imports this module
+    out["substrate"] = guard.stats()
+    out["substrate"]["quarantined"] = [
+        {"kernel": kn, "depth": d} for (_, kn, d) in quarantined]
     return out
 
 
@@ -363,6 +429,8 @@ def choose_depth(
         depth = solve_depth(profile, machine=m, latency_s=latency_s,
                             vmem_budget=budget, vmem_cap=vmem_cap)
     if kernel is not None:
+        with _lock:
+            depth = _avoid_quarantined(m.name, kernel, depth)
         key = (m.name, kernel)
         with _lock:
             _last_choice[key] = depth

@@ -507,53 +507,69 @@ def coro_call(
 
     loads, stores = spec.loads, spec.stores
     shaped_vars = spec.materialized_vars()
-    scratch = spec.scratch_shapes(depth)
 
-    def kernel(*refs):
-        named = dict(zip(arg_names, refs[:n_named]))
-        rest = list(refs[n_named:])
-        load_bufs = tuple(rest[:len(loads)])
-        del rest[:len(loads)]
-        store_bufs = tuple(rest[:len(stores)])
-        del rest[:len(stores)]
-        load_sem = rest.pop(0) if loads else None
-        store_sem = rest.pop(0) if stores else None
-        for v in shaped_vars:
-            named[v.name] = rest.pop(0)
-        assert not rest, "scratch ref count mismatch"
-        for s, buf in zip((*loads, *stores), (*load_bufs, *store_bufs)):
-            named[s.name] = buf
-        # program ids, evaluated once at kernel entry (they cannot be read
-        # from inside the fori-mode loop body): ctx.pids[axis]
-        named["pids"] = tuple(pl.program_id(a) for a in range(len(grid)))
-        ctx = CoroRefs(named)
-        grid_step = (pl.program_id(drive_axis)
-                     if drive_axis is not None else None)
-        coro_pipeline(spec, ctx, load_bufs, store_bufs, load_sem, store_sem,
-                      n_tiles=n_tiles, depth=depth, body=body,
-                      prologue=prologue, epilogue=epilogue,
-                      carry_init=carry_init, grid_step=grid_step)
+    def attempt(run_depth: int):
+        """One guarded attempt: re-derive scratch shapes for `run_depth`
+        and build + launch the pallas_call (the guard's backoff ladder
+        re-enters here with halved depths — DESIGN.md §2.7)."""
+        scratch = spec.scratch_shapes(run_depth)
 
-    kwargs = {}
-    if input_output_aliases is not None:
-        kwargs["input_output_aliases"] = input_output_aliases
-    if num_scalar_prefetch:
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=num_scalar_prefetch,
-            grid=grid,
-            in_specs=in_specs,
-            out_specs=out_specs,
-            scratch_shapes=scratch,
-        )
-        call = pl.pallas_call(kernel, grid_spec=grid_spec,
-                              out_shape=out_shape, interpret=interpret,
-                              **kwargs)
-    else:
-        call = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
-                              out_specs=out_specs, out_shape=out_shape,
-                              scratch_shapes=scratch, interpret=interpret,
-                              **kwargs)
-    t0 = time.perf_counter()
-    out = call(*operands)
-    _observe_pipeline(spec, t0, out, n_tiles, depth)
-    return out
+        def kernel(*refs):
+            named = dict(zip(arg_names, refs[:n_named]))
+            rest = list(refs[n_named:])
+            load_bufs = tuple(rest[:len(loads)])
+            del rest[:len(loads)]
+            store_bufs = tuple(rest[:len(stores)])
+            del rest[:len(stores)]
+            load_sem = rest.pop(0) if loads else None
+            store_sem = rest.pop(0) if stores else None
+            for v in shaped_vars:
+                named[v.name] = rest.pop(0)
+            assert not rest, "scratch ref count mismatch"
+            for s, buf in zip((*loads, *stores), (*load_bufs, *store_bufs)):
+                named[s.name] = buf
+            # program ids, evaluated once at kernel entry (they cannot be
+            # read from inside the fori-mode loop body): ctx.pids[axis]
+            named["pids"] = tuple(pl.program_id(a) for a in range(len(grid)))
+            ctx = CoroRefs(named)
+            grid_step = (pl.program_id(drive_axis)
+                         if drive_axis is not None else None)
+            coro_pipeline(spec, ctx, load_bufs, store_bufs, load_sem,
+                          store_sem, n_tiles=n_tiles, depth=run_depth,
+                          body=body, prologue=prologue, epilogue=epilogue,
+                          carry_init=carry_init, grid_step=grid_step)
+
+        kwargs = {}
+        if input_output_aliases is not None:
+            kwargs["input_output_aliases"] = input_output_aliases
+        if num_scalar_prefetch:
+            grid_spec = pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=num_scalar_prefetch,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                scratch_shapes=scratch,
+            )
+            call = pl.pallas_call(kernel, grid_spec=grid_spec,
+                                  out_shape=out_shape, interpret=interpret,
+                                  **kwargs)
+        else:
+            call = pl.pallas_call(kernel, grid=grid, in_specs=in_specs,
+                                  out_specs=out_specs, out_shape=out_shape,
+                                  scratch_shapes=scratch, interpret=interpret,
+                                  **kwargs)
+        return call(*operands)
+
+    from repro.core import guard  # local: guard imports obs/kernels lazily
+
+    res = guard.guarded_call(spec, operands, attempt,
+                             depth=depth, n_tiles=n_tiles)
+    if res.fallback:
+        # the jnp twin answered: no pipeline ran, so nothing to observe,
+        # and last_choice keeps the depth the solver proposed
+        return res.out
+    if res.depth != depth:
+        # backoff landed on a lower depth: report the depth actually run
+        autotune.record_choice(spec.name, res.depth)
+    _observe_pipeline(spec, res.t0, res.out, n_tiles, res.depth)
+    return res.out

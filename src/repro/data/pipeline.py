@@ -3,7 +3,9 @@
 `batch_for_step(step)` is a pure function of (seed, step, shard) — restart at
 any step reproduces the exact token stream with no iterator state to persist
 (the checkpoint only stores the step counter). That property is what makes
-checkpoint/restart and elastic re-sharding exact (runtime/fault_tolerance).
+checkpoint/restart exact (`runtime/fault_tolerance.run_with_restarts`
+re-enters the step loop; template-based `checkpointing.restore` handles
+elastic re-sharding).
 
 The synthetic task is a fixed seeded Markov chain over the vocabulary, so
 models have a real learnable signal with a known loss floor (the chain's

@@ -1,3 +1,62 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Coroutine kernel families — and their jnp-twin fallback registry.
+
+Every family ships a pure-jnp oracle (`ref.py`); ISSUE-10's guarded
+substrate (`core.guard`) uses those oracles as *fallback twins*: when a
+kernel exhausts its depth-backoff ladder (or its circuit breaker is open,
+or the parity sentinel catches a divergence) the registered twin computes
+the answer instead, so a `coro_call` never surfaces an unhandled
+`SubstrateError` on a family with a twin.
+
+Each family's `ops.py` registers its adapters at import time via
+`register_twin(spec_name, fn)`; an adapter has the signature
+``fn(spec, *operands) -> out`` where `operands` are exactly the positional
+operands the family passed to `coro_call` and `out` matches the pallas
+output structure. Resolution is lazy: `fallback_twin` imports the six
+`ops` modules on first use, so importing `repro.kernels` stays free of
+jax-tracing side effects and the core -> kernels import edge only exists
+at fallback time (no cycle with `core.coro`).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["fallback_twin", "register_twin", "registered_twins"]
+
+_FAMILIES = (
+    "coro_gather",
+    "coro_scatter_add",
+    "decode_attention",
+    "moe_gmm",
+    "ssd_scan",
+    "stream_copy",
+)
+
+_TWINS: Dict[str, Callable[..., Any]] = {}
+_loaded = False
+
+
+def register_twin(name: str, fn: Callable[..., Any]) -> None:
+    """Register `fn(spec, *operands)` as the fallback twin for the
+    `CoroSpec` named `name` (called by each family's ops.py on import)."""
+    _TWINS[name] = fn
+
+
+def _ensure_registered() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    for family in _FAMILIES:
+        importlib.import_module(f"repro.kernels.{family}.ops")
+
+
+def fallback_twin(name: str) -> Optional[Callable[..., Any]]:
+    """The registered twin for spec `name`, or None (no degradation path)."""
+    _ensure_registered()
+    return _TWINS.get(name)
+
+
+def registered_twins() -> List[str]:
+    _ensure_registered()
+    return sorted(_TWINS)

@@ -56,3 +56,23 @@ def coalesced_gather(table, idx: np.ndarray, *, span: int = 8,
         return jnp.zeros((0, d), table.dtype), plan
     flat = jnp.concatenate(parts, axis=0)
     return flat[jnp.asarray(plan.order)], plan
+
+
+# -------- fallback twins (core.guard degradation path, ISSUE-10) --------
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _row_gather_twin(spec, idx, table):
+    from repro.kernels.coro_gather.ref import gather_ref
+    return gather_ref(table, idx)
+
+
+def _span_gather_twin(spec, starts, table):
+    # spec.loads[0] is the span stream: tile = (span, d)
+    span = spec.loads[0].tile[0]
+    rows = (starts[:, None] + jnp.arange(span, dtype=starts.dtype)).reshape(-1)
+    return jnp.take(table, rows, axis=0)
+
+
+register_twin("row_gather", _row_gather_twin)
+register_twin("span_gather", _span_gather_twin)

@@ -47,3 +47,15 @@ def coro_scatter_add(table, idx, updates, *, depth: int | None = None,
         table, jnp.asarray(uniq, jnp.int32), jnp.asarray(summed),
         depth=depth, rows_per_tile=rows_per_tile, interpret=interpret,
     )
+
+
+# -------- fallback twin (core.guard degradation path, ISSUE-10) --------
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _scatter_add_twin(spec, idx, table, updates):
+    from repro.kernels.coro_scatter_add.ref import scatter_add_ref
+    return scatter_add_ref(table, idx, updates)
+
+
+register_twin("scatter_add", _scatter_add_twin)

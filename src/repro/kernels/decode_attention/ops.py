@@ -30,3 +30,28 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
     interpret = default_interpret() if interpret is None else interpret
     return paged_flash_decode(q, k_pool, v_pool, block_tables, lengths,
                               depth=depth, interpret=interpret)
+
+
+# -------- fallback twins (core.guard degradation path, ISSUE-10) --------
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _flash_decode_twin(spec, pos, q, k_cache, v_cache):
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    return decode_attention_ref(q, k_cache, v_cache, pos[0])
+
+
+def _paged_decode_twin(spec, bt_flat, lengths, q, k_pool, v_pool):
+    # models.common.paged_decode_attention is the traceable masked twin the
+    # serving engine already trusts; the seed paged_decode_attention_ref is
+    # a host loop (int(lengths[r])) and cannot police traced calls.
+    from repro.models.common import paged_decode_attention as paged_twin
+    b = q.shape[0]
+    m = bt_flat.shape[0] // b
+    out = paged_twin(q[:, None], k_pool, v_pool, bt_flat.reshape(b, m),
+                     lengths)
+    return out[:, 0].astype(q.dtype)
+
+
+register_twin("flash_decode", _flash_decode_twin)
+register_twin("paged_decode", _paged_decode_twin)

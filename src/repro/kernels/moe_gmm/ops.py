@@ -14,3 +14,15 @@ def moe_gmm(tokens, weights, *, f_tile: int = 128, depth: int | None = None,
             interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
     return gmm(tokens, weights, f_tile=f_tile, depth=depth, interpret=interpret)
+
+
+# -------- fallback twin (core.guard degradation path, ISSUE-10) --------
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _gmm_twin(spec, tokens, weights):
+    from repro.kernels.moe_gmm.ref import gmm_ref
+    return gmm_ref(tokens, weights).astype(tokens.dtype)
+
+
+register_twin("moe_gmm", _gmm_twin)

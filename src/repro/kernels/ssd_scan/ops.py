@@ -17,3 +17,21 @@ def ssd(x, dt, A, B, C, *, chunk: int = 64, depth: int | None = None,
     interpret = default_interpret() if interpret is None else interpret
     return ssd_scan(x, dt, A, B, C, chunk=chunk, depth=depth,
                     interpret=interpret)
+
+
+# -------- fallback twin (core.guard degradation path, ISSUE-10) --------
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _ssd_twin(spec, x, dt, A, B, C):
+    # same chunking as the kernel (spec.loads[0] is the x chunk stream), so
+    # the parity sentinel compares like-for-like chunked math
+    import jax.numpy as jnp
+
+    from repro.models.ssm import ssd_chunked
+    chunk = spec.loads[0].tile[0]
+    y, h_final = ssd_chunked(x, dt, A, B, C, chunk)
+    return [y.astype(x.dtype), h_final.astype(jnp.float32)]
+
+
+register_twin("ssd_scan", _ssd_twin)

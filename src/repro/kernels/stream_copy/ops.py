@@ -15,3 +15,16 @@ def stream_triad(b, c, scalar, *, rows: int = 128, depth: int | None = None,
                  interpret: bool | None = None):
     interpret = default_interpret() if interpret is None else interpret
     return triad(b, c, scalar, rows=rows, depth=depth, interpret=interpret)
+
+
+# -------- fallback twin (core.guard degradation path, ISSUE-10) --------
+# Adapter signature: (spec, *coro_call operands) -> pallas output structure.
+from repro.kernels import register_twin  # noqa: E402
+
+
+def _triad_twin(spec, s, b, c):
+    from repro.kernels.stream_copy.ref import triad_ref
+    return triad_ref(b, c, s[0])
+
+
+register_twin("stream_triad", _triad_twin)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, token_split
-from repro.core import autotune
+from repro.core import autotune, guard
 from repro.core.machine import get_machine
 from repro.models import build_model
 from repro.obs import trace as obs_trace
@@ -72,6 +72,12 @@ def timed_decode_loop(decode, params, cache, tokens, *, steps, make_batch):
             jax.block_until_ready(tokens)
         dt = time.perf_counter() - t0
         lat.append(dt)
+        # always-on numerics policing (DESIGN.md §2.7): the dense loop has
+        # no twin to fall back to, so a non-finite step raises under
+        # --strict and is counted (substrate.numerics_faults) otherwise
+        nerr = guard.scan_output("serve_dense_decode", logits)
+        if nerr is not None and guard.strict_mode():
+            raise nerr
         if autotune.telemetry_enabled():
             # one "tile" per request token this step; the first observation
             # (jit compile) is dropped by observe_pipeline's warmup skip
@@ -86,7 +92,10 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
           engine: str = "dense", block_size: int = 16,
           num_blocks: int | None = None, prefix_cache: bool = True,
           prefill_chunk: int = 32, deadline_s: float | None = None,
-          chaos: int | None = None):
+          chaos: int | None = None, strict: bool = False):
+    if strict:
+        # CI parity lanes: no silent degradation — a substrate fault raises
+        guard.set_strict(True)
     if layout == "serving":
         from repro.runtime.layouts import serving_config_overrides
         cfg = cfg.replace(**serving_config_overrides())
@@ -132,6 +141,7 @@ def serve(cfg, *, batch: int, prompt_len: int, gen: int, seed: int = 0,
         "decode_s": round(t_decode, 3),
         "decode_tok_per_s": round(batch * (gen - 1) / max(t_decode, 1e-9), 1),
         "sample_tokens": np.asarray(generated[0, :8]).tolist(),
+        "substrate": guard.stats(),
     }
     stats.update(latency_report(lat))
     return stats
@@ -200,6 +210,10 @@ def main(argv=None):
                     help="per-request wall-clock deadline in seconds; "
                          "expired requests are CANCELLED at the next round "
                          "boundary (paged engine)")
+    ap.add_argument("--strict", action="store_true",
+                    help="disable substrate degradation: any kernel "
+                         "backoff/fallback/parity mismatch raises its typed "
+                         "SubstrateError instead (CI parity lanes)")
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="inject a deterministic fault schedule (pool "
                          "exhaustion, reclaim refusal, step exceptions, "
@@ -217,7 +231,8 @@ def main(argv=None):
                   block_size=args.block_size, num_blocks=args.num_blocks,
                   prefix_cache=args.prefix_cache,
                   prefill_chunk=args.prefill_chunk,
-                  deadline_s=args.deadline_s, chaos=args.chaos)
+                  deadline_s=args.deadline_s, chaos=args.chaos,
+                  strict=args.strict)
     if args.trace:
         stats["trace"] = obs_trace.get_tracer().export(args.trace)
         stats["trace_events"] = len(obs_trace.get_tracer().events)

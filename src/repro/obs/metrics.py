@@ -321,11 +321,18 @@ def _autotune_view() -> Dict[str, Any]:
     return autotune.telemetry_summary()
 
 
+def _substrate_view() -> Dict[str, Any]:
+    from repro.core import guard  # local: guard imports this module
+
+    return guard.stats()
+
+
 def _make_default() -> Any:
     if not _env_enabled():
         return NULL_REGISTRY
     reg = MetricsRegistry()
     reg.view("autotune", _autotune_view)
+    reg.view("substrate", _substrate_view)
     return reg
 
 
@@ -359,6 +366,7 @@ def set_metrics(on: bool) -> None:
         if _default is NULL_REGISTRY:
             reg = MetricsRegistry()
             reg.view("autotune", _autotune_view)
+            reg.view("substrate", _substrate_view)
             _default = reg
     else:
         _default = NULL_REGISTRY

@@ -1,19 +1,26 @@
-"""Fault tolerance: restart supervision, straggler detection, elastic meshes.
+"""Fault tolerance: restart supervision and straggler detection.
 
 Scale-out posture (DESIGN.md §3.1): at 1000+ nodes the unit of recovery is
 the *job step*, not the process — the data pipeline is a pure function of the
 step counter and checkpoints are atomic, so any failure maps to "restore the
-last checkpoint, rebuild a mesh from the surviving devices, continue".
+last checkpoint, continue".
 
   * run_with_restarts  — supervisor: retries the step loop after transient
-    failures, restoring state via the caller's restore_fn.
+    failures, restoring state via the caller's restore_fn. Kernel-substrate
+    failures (`core.guard.SubstrateError`, DESIGN.md §2.7) are retriable by
+    construction — they subclass RuntimeError — and their kernel context
+    (kernel / machine / depth) is recorded in `RestartReport.failures` so a
+    post-mortem can tell a dying node from a bad kernel config. Note the
+    supervisor is the *outer* ring: inside a step, `guarded_call` already
+    walked its depth ladder and twin fallback; a SubstrateError reaching
+    here means strict mode or a family with no degradation path.
   * StragglerMonitor   — per-step latency tracker flagging outliers
     (> threshold x running median); the launcher logs and, in a real
     deployment, triggers hot-spare swap / re-shard for persistent offenders.
-  * elastic_mesh_shape — largest (data, model) grid fitting the surviving
-    device count, preferring to preserve the model axis (checkpoints
-    re-shard over data for free; model-axis changes also work since
-    checkpoints store logical arrays).
+
+(The seed-era `elastic_mesh_shape` helper is gone: elastic restore is
+template-based in `checkpointing.checkpoint.restore`, and nothing else
+consumed the mesh math.)
 """
 from __future__ import annotations
 
@@ -21,7 +28,9 @@ import collections
 import dataclasses
 import statistics
 import time
-from typing import Callable, Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Tuple
+
+from repro.core.guard import SubstrateError
 
 
 @dataclasses.dataclass
@@ -29,6 +38,16 @@ class RestartReport:
     restarts: int
     failures: List[str]
     completed: bool
+
+
+def _describe_failure(e: BaseException) -> str:
+    """One log line per failure; SubstrateError carries kernel context."""
+    if isinstance(e, SubstrateError):
+        ctx = f"kernel={e.kernel} machine={e.machine}"
+        if e.depth is not None:
+            ctx += f" depth={e.depth}"
+        return f"{type(e).__name__}[{ctx}]: {e}"
+    return f"{type(e).__name__}: {e}"
 
 
 def run_with_restarts(step_loop: Callable[[], None], *,
@@ -42,7 +61,7 @@ def run_with_restarts(step_loop: Callable[[], None], *,
             step_loop()
             return RestartReport(attempt, failures, True)
         except retriable as e:  # noqa: PERF203
-            failures.append(f"{type(e).__name__}: {e}")
+            failures.append(_describe_failure(e))
             if attempt == max_restarts:
                 break
             restore_fn()
@@ -88,11 +107,3 @@ class _Timer:
     def __exit__(self, *exc):
         self.straggler = self.mon.record(time.perf_counter() - self.t0)
         return False
-
-
-def elastic_mesh_shape(n_devices: int, *, prefer_model: int = 16) -> Tuple[int, int]:
-    """Largest (data, model) grid for a (possibly degraded) device count."""
-    model = prefer_model
-    while model > 1 and (n_devices % model != 0):
-        model //= 2
-    return max(n_devices // model, 1), model

@@ -67,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import autotune
+from repro.core import autotune, guard
 from repro.core.machine import get_machine
 from repro.kernels.decode_attention.decode_attention import paged_decode_spec
 from repro.models import build_model
@@ -403,6 +403,8 @@ class PagedServingEngine:
         if n <= 0:
             return
         self.faults.check("prefill", rid=req.rid, start=start, n=n)
+        guard.check_injected("paged_prefill_chunk", self.faults,
+                             rid=req.rid, start=start, n=n)
         # the chunk's first page may be shared (a partial-block prefix hit):
         # fork it before writing rows into it
         self._make_writable(req, start)
@@ -416,6 +418,12 @@ class PagedServingEngine:
                 self.params, self.k_pools, self.v_pools,
                 ctxt[start:start + n], table, start, n)
         self._c_prefill_s.inc(time.perf_counter() - t0)
+        # the always-on numerics scan (DESIGN.md §2.7): a non-finite chunk
+        # raises before prefill_pos advances, so the chunk re-runs on retry
+        # (KV rows rewrite idempotently; the pools are already committed)
+        nerr = guard.scan_output("paged_prefill_chunk", logits)
+        if nerr is not None:
+            raise nerr
         req.prefill_pos = start + n
         if self.prefix_cache is not None:
             self.prefix_cache.insert(ctxt[:req.prefill_pos],
@@ -533,6 +541,12 @@ class PagedServingEngine:
         try:
             self.faults.check("decode", round=self.rounds,
                               width=len(writable))
+            # kernel-site faults fire BEFORE the jit call: the decode jit
+            # donates the pools, so an attempt must not consume them and
+            # then fail — a typed SubstrateError here rides the same
+            # rollback + _note_fault path as any other step fault
+            guard.check_injected("paged_decode_round", self.faults,
+                                 round=self.rounds, width=len(writable))
             decode = self._decode(tw)
             with self.tracer.span("decode_round", width=len(writable),
                                   table_width=tw):
@@ -685,6 +699,7 @@ class PagedServingEngine:
             "stalls": int(self._c_stalls.value),
             "step_faults": int(self._c_step_faults.value),
             "faults_injected": self.faults.injected,
+            "substrate": guard.stats(),  # process-wide guarded-call totals
             "rounds": self.rounds,
             "preemptions": self.scheduler.preemptions,
             "round_width": self.round_width,

@@ -20,6 +20,12 @@ Sites (each hook names one):
   decode          - the jitted decode round raises `InjectedFault`
   prefill         - one prefill chunk raises `InjectedFault`
   latency         - the round loop sleeps a spike before doing work
+  kernel_compile  - a kernel-substrate attempt fails like a Mosaic compile
+                    error (`core.guard` raises `KernelCompileError`)
+  kernel_oom      - a kernel-substrate attempt fails RESOURCE_EXHAUSTED
+                    (`KernelResourceError`) — exercises the depth ladder
+  kernel_nan      - a successful attempt's output is poisoned non-finite so
+                    the always-on scan must catch it (`KernelNumericsError`)
 
 Determinism: every site draws from its **own** `numpy` Generator seeded by
 ``(seed, site_index)``, so whether one site fires never perturbs another —
@@ -52,6 +58,14 @@ SITES: Tuple[str, ...] = (
     "decode",
     "prefill",
     "latency",
+    # kernel-site streams (ISSUE-10): fired by `core.guard` inside every
+    # guarded coro_call (`set_injector`) and by the engine's pre-call
+    # `guard.check_injected` hooks. Appended AFTER the seed sites so the
+    # (seed, site_index) rng streams of existing sites — and therefore the
+    # bit-for-bit replayability of pre-ISSUE-10 chaos schedules — survive.
+    "kernel_compile",
+    "kernel_oom",
+    "kernel_nan",
 )
 
 # per-round / per-call firing probabilities of the stock chaos schedule —
@@ -64,6 +78,9 @@ DEFAULT_RATES: Dict[str, float] = {
     "decode": 0.03,
     "prefill": 0.03,
     "latency": 0.05,
+    "kernel_compile": 0.03,
+    "kernel_oom": 0.02,
+    "kernel_nan": 0.02,
 }
 
 LOG_CAPACITY = 1024

@@ -6,6 +6,11 @@ from pathlib import Path
 # on the single real CPU device; only launch/dryrun.py forces 512 devices.
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
+# Parity sentinels on (sampled) for the whole suite unless a test or the CI
+# lane overrides — tests are exactly where a silent kernel/twin divergence
+# should be caught (DESIGN.md §2.7; production default is off).
+os.environ.setdefault("REPRO_PARITY", "sampled")
+
 import numpy as np
 import pytest
 
@@ -17,18 +22,23 @@ def rng():
 
 @pytest.fixture(autouse=True)
 def _reset_machine_and_autotune():
-    """Isolate tests from each other's feedback state: clear autotune samples,
-    re-resolve the machine profile from the environment, and reset the
-    observability layer (tests that call set_machine(...), record_transfer(...)
-    or obs.set_enabled(...) must not leak into neighbours)."""
+    """Isolate tests from each other's feedback state: clear autotune samples
+    (which also clears the guard's config quarantine), re-resolve the machine
+    profile from the environment, reset the observability layer, and reset
+    the guarded-substrate state — counters, circuit breakers, strict/parity
+    modes, injector (tests that call set_machine(...), record_transfer(...),
+    obs.set_enabled(...), guard.set_strict(...) or trip a breaker must not
+    leak into neighbours)."""
     import repro.obs as obs
-    from repro.core import autotune
+    from repro.core import autotune, guard
     from repro.core.machine import set_machine
 
     autotune.clear_samples()
     set_machine(None)
     obs.reset()
+    guard.reset()
     yield
     autotune.clear_samples()
     set_machine(None)
     obs.reset()
+    guard.reset()

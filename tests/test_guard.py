@@ -1,0 +1,371 @@
+"""The guarded kernel substrate (ISSUE-10, DESIGN.md §2.7): taxonomy,
+depth-backoff ladder, twin fallback, circuit breaker, config quarantine,
+parity sentinels, strict mode — and the engine-level guarantee that a
+kernel-site chaos schedule degrades answers never, throughput maybe.
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import autotune, guard
+from repro.core.guard import (
+    KernelCompileError,
+    KernelNumericsError,
+    KernelParityError,
+    KernelResourceError,
+    SubstrateError,
+)
+from repro.kernels.coro_gather.ops import coro_gather
+from repro.kernels.coro_gather.ref import gather_ref
+from repro.models import build_model
+from repro.serve import FaultInjector, PagedServingEngine, TERMINAL_STATES
+
+
+@pytest.fixture
+def twin_registry():
+    """Register throwaway twins; unregister on teardown so fake names never
+    leak into the process-wide registry."""
+    import repro.kernels as kernels_pkg
+
+    added = []
+
+    def add(name, fn):
+        kernels_pkg.register_twin(name, fn)
+        added.append(name)
+
+    yield add
+    for name in added:
+        kernels_pkg._TWINS.pop(name, None)
+
+
+def _fake_spec(name):
+    """Just enough spec surface for guarded_call: a name and no streams."""
+    return types.SimpleNamespace(name=name, loads=(), stores=())
+
+
+def _gather_operands(n_idx=64):
+    rng = np.random.RandomState(0)
+    table = jnp.asarray(rng.randn(256, 128), jnp.float32)
+    idx = jnp.asarray(rng.randint(0, 256, n_idx), jnp.int32)
+    return table, idx
+
+
+# ---------------------------------------------------------------- taxonomy
+
+
+def test_taxonomy_carries_launch_context():
+    e = KernelResourceError("vmem overcommit", kernel="row_gather",
+                            machine="v5e", depth=8, tile=(8, 128))
+    assert isinstance(e, SubstrateError) and isinstance(e, RuntimeError)
+    assert (e.kernel, e.machine, e.depth, e.tile) == (
+        "row_gather", "v5e", 8, (8, 128))
+    msg = str(e)
+    assert "kernel=row_gather" in msg and "depth=8" in msg
+
+
+def test_taxonomy_defaults_machine_from_active_profile():
+    e = KernelCompileError("boom", kernel="k")
+    from repro.core.machine import get_machine
+    assert e.machine == get_machine().name
+
+
+def test_classification_resource_vs_compile():
+    """A raw RuntimeError mentioning VMEM classifies as resource pressure;
+    anything else as a compile/lowering failure — with the original as
+    __cause__ (no twin registered, so the typed error surfaces)."""
+    spec = _fake_spec("no_twin_classify_probe")
+
+    def oom(_d):
+        raise RuntimeError("RESOURCE_EXHAUSTED: scoped vmem request")
+
+    with pytest.raises(KernelResourceError) as ei:
+        guard.guarded_call(spec, (), oom, depth=1, n_tiles=1)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+    def lowering(_d):
+        raise ValueError("unsupported lowering")
+
+    with pytest.raises(KernelCompileError):
+        guard.guarded_call(spec, (), lowering, depth=1, n_tiles=1)
+
+
+# ---------------------------------------------------------------- policing
+
+
+def test_scan_output_flags_nonfinite_floats_only():
+    assert guard.scan_output("k", jnp.ones((4,))) is None
+    assert guard.scan_output("k", jnp.arange(4)) is None  # ints never flagged
+    err = guard.scan_output("k", [jnp.ones(3), jnp.array([1.0, jnp.nan])],
+                            depth=2)
+    assert isinstance(err, KernelNumericsError) and err.depth == 2
+    assert guard.stats()["numerics_faults"] == 1
+
+
+def test_scan_output_skips_tracers():
+    @jax.jit
+    def f(x):
+        assert guard.scan_output("k", x) is None  # tracer: nothing to police
+        return x
+
+    f(jnp.ones(3))
+    assert guard.stats()["numerics_faults"] == 0
+
+
+def test_check_injected_raises_typed_errors():
+    inj = FaultInjector(0, rates={"kernel_oom": 1.0})
+    with pytest.raises(KernelResourceError):
+        guard.check_injected("paged_decode_round", inj, round=3)
+    assert guard.stats()["injected_faults"] == 1
+
+
+# ------------------------------------------------------------------ ladder
+
+
+def test_compile_fault_walks_ladder_to_twin():
+    """Every attempt fails like a Mosaic compile error: the ladder halves
+    monotonically to depth 1, every failed depth is quarantined, and the
+    registered jnp twin still produces the exact answer."""
+    table, idx = _gather_operands()
+    guard.set_injector(FaultInjector(0, rates={"kernel_compile": 1.0}))
+    out = coro_gather(table, idx)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gather_ref(table, idx)))
+
+    ladder = guard.last_ladder("row_gather")
+    assert ladder and ladder[-1] == 1
+    assert all(a > b for a, b in zip(ladder, ladder[1:]))  # strictly falling
+    assert autotune.quarantined_depths("row_gather") == sorted(ladder)
+
+    s = guard.stats()
+    assert s["fallbacks"] == 1 and s["backoffs"] == len(ladder) - 1
+    assert s["injected_faults"] == len(ladder)
+
+
+def test_nan_injection_caught_by_scan_then_twin():
+    """kernel_nan poisons every successful attempt's output; the always-on
+    scan converts each to KernelNumericsError until the twin answers."""
+    table, idx = _gather_operands()
+    guard.set_injector(FaultInjector(0, rates={"kernel_nan": 1.0}))
+    out = coro_gather(table, idx)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gather_ref(table, idx)))
+    s = guard.stats()
+    assert s["numerics_faults"] == len(guard.last_ladder("row_gather"))
+    assert s["fallbacks"] == 1
+
+
+def test_quarantine_steers_choose_depth():
+    """choose_depth never re-proposes a quarantined (machine, kernel, depth):
+    it halves below the poisoned configs instead."""
+    prof = autotune.profile_row_gather(8, 512, 4)
+    d = autotune.choose_depth(prof, kernel="quarantine_probe")
+    assert d >= 2  # the ladder below needs a rung to descend
+    while d > 1:
+        autotune.quarantine_config("quarantine_probe", d)
+        assert autotune.is_quarantined("quarantine_probe", d)
+        nd = autotune.choose_depth(prof, kernel="quarantine_probe")
+        assert nd < d and not autotune.is_quarantined("quarantine_probe", nd)
+        d = nd
+    assert autotune.quarantined_depths("quarantine_probe")
+    autotune.clear_quarantine("quarantine_probe")
+    assert not autotune.quarantined_depths("quarantine_probe")
+
+
+# ------------------------------------------------------------------ parity
+
+
+def test_parity_sentinel_catches_poisoned_kernel(twin_registry):
+    """A kernel that silently computes the wrong answer is caught by the
+    sentinel: the twin's output is substituted and the failure feeds the
+    quarantine/breaker path exactly like a crash."""
+    x = jnp.arange(8.0)
+    twin_registry("parity_probe", lambda spec, v: v + 1.0)
+    guard.set_parity("full")
+
+    spec = _fake_spec("parity_probe")
+    res = guard.guarded_call(spec, (x,), lambda d: x + 2.0,  # wrong answer
+                             depth=1, n_tiles=1)
+    assert res.path == "twin" and res.fallback
+    np.testing.assert_allclose(np.asarray(res.out), np.asarray(x + 1.0))
+    s = guard.stats()
+    assert s["parity_checks"] == 1 and s["parity_mismatches"] == 1
+    assert s["fallbacks"] == 1
+    assert autotune.quarantined_depths("parity_probe") == [1]
+
+
+def test_parity_strict_raises(twin_registry):
+    x = jnp.arange(4.0)
+    twin_registry("parity_strict_probe", lambda spec, v: v * 2.0)
+    guard.set_parity("full")
+    guard.set_strict(True)
+    spec = _fake_spec("parity_strict_probe")
+    with pytest.raises(KernelParityError):
+        guard.guarded_call(spec, (x,), lambda d: v_wrong(x), depth=1,
+                           n_tiles=1)
+
+
+def v_wrong(x):
+    return x * 3.0
+
+
+def test_parity_sampled_is_deterministic_1_in_n(twin_registry):
+    """sampled mode checks call 1, N+1, 2N+1, ... per (machine, kernel) —
+    deterministic, not random."""
+    x = jnp.ones(4)
+    twin_registry("parity_sample_probe", lambda spec, v: v)
+    guard.set_parity("sampled", every=3)
+    spec = _fake_spec("parity_sample_probe")
+    for _ in range(7):
+        guard.guarded_call(spec, (x,), lambda d: x, depth=1, n_tiles=1)
+    assert guard.stats()["parity_checks"] == 3  # calls 1, 4, 7
+
+
+def test_parity_clean_kernel_passes_full_check():
+    """The real row_gather kernel against its real twin: full parity on a
+    clean call must record a check and no mismatch."""
+    table, idx = _gather_operands(32)
+    guard.set_parity("full")
+    out = coro_gather(table, idx)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gather_ref(table, idx)))
+    s = guard.stats()
+    assert s["parity_checks"] >= 1 and s["parity_mismatches"] == 0
+    assert s["clean_calls"] >= 1
+
+
+# ----------------------------------------------------------------- breaker
+
+
+def test_breaker_opens_routes_probes_and_closes(twin_registry):
+    """closed -> open after BREAKER_THRESHOLD consecutive failures; while
+    open, calls route to the twin WITHOUT attempting the kernel; after
+    BREAKER_COOLDOWN_CALLS a half-open probe runs the kernel and, on
+    success, re-closes."""
+    twin_registry("breaker_probe", lambda spec: jnp.zeros(2))
+    guard.set_parity("off")  # the sentinel would flag twin != attempt output
+    spec = _fake_spec("breaker_probe")
+    calls = {"n": 0, "fail": True}
+
+    def attempt(_d):
+        calls["n"] += 1
+        if calls["fail"]:
+            raise RuntimeError("persistent lowering bug")
+        return jnp.ones(2)
+
+    def one():
+        return guard.guarded_call(spec, (), attempt, depth=1, n_tiles=1)
+
+    for i in range(guard.BREAKER_THRESHOLD):
+        assert one().path == "twin"
+    assert guard.breaker_state("breaker_probe") == "open"
+    assert calls["n"] == guard.BREAKER_THRESHOLD
+
+    for _ in range(guard.BREAKER_COOLDOWN_CALLS - 1):
+        res = one()
+        assert res.path == "breaker" and res.fallback
+    assert calls["n"] == guard.BREAKER_THRESHOLD  # kernel never attempted
+    assert guard.stats()["breakers"] == {"breaker_probe": "open"}
+
+    calls["fail"] = False  # the bug is "fixed"; cooldown over: probe
+    res = one()
+    assert res.path == "clean"
+    assert calls["n"] == guard.BREAKER_THRESHOLD + 1
+    assert guard.breaker_state("breaker_probe") == "closed"
+    assert guard.stats()["breaker_trips"] == 1
+
+
+def test_breaker_failed_probe_reopens(twin_registry):
+    twin_registry("breaker_reopen_probe", lambda spec: jnp.zeros(1))
+    spec = _fake_spec("breaker_reopen_probe")
+
+    def attempt(_d):
+        raise RuntimeError("still broken")
+
+    def one():
+        return guard.guarded_call(spec, (), attempt, depth=1, n_tiles=1)
+
+    for _ in range(guard.BREAKER_THRESHOLD + guard.BREAKER_COOLDOWN_CALLS):
+        one()
+    # the last call was the half-open probe; it failed -> open again
+    assert guard.breaker_state("breaker_reopen_probe") == "open"
+    assert guard.stats()["breaker_trips"] == 2
+
+
+# ------------------------------------------------------------------ strict
+
+
+def test_strict_clean_path_records_zero_degradation():
+    guard.set_strict(True)
+    table, idx = _gather_operands(32)
+    out = coro_gather(table, idx)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(gather_ref(table, idx)))
+    s = guard.stats()
+    assert s["clean_calls"] >= 1
+    assert s["backoffs"] == 0 and s["fallbacks"] == 0
+
+
+def test_strict_surfaces_first_failure():
+    guard.set_strict(True)
+    guard.set_injector(FaultInjector(0, rates={"kernel_compile": 1.0}))
+    table, idx = _gather_operands(32)
+    with pytest.raises(KernelCompileError) as ei:
+        coro_gather(table, idx)
+    assert ei.value.kernel == "row_gather"
+    assert len(guard.last_ladder("row_gather")) == 1  # no ladder walked
+
+
+# ---------------------------------------------------------- engine + chaos
+
+
+def _f32_cfg():
+    return get_config("yi-6b").reduced().replace(dtype="float32",
+                                                 param_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = _f32_cfg()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_kernel_chaos_terminal_and_replayable(tiny):
+    """Kernel-site chaos (compile / oom / nan at the engine's guarded call
+    sites) drains every request to a terminal state with ZERO parity
+    mismatches — and replays bit-for-bit across two identical runs."""
+    cfg, params = tiny
+    rates = {"pool_exhausted": 0.05, "kernel_compile": 0.25,
+             "kernel_oom": 0.2, "kernel_nan": 0.2}
+
+    def run():
+        rng = np.random.default_rng(11)
+        inj = FaultInjector(9, rates=rates)
+        eng = PagedServingEngine(cfg, params=params, block_size=4,
+                                 num_blocks=12, faults=inj, max_in_flight=3)
+        rids = [eng.submit(rng.integers(0, cfg.vocab,
+                                        int(rng.integers(3, 9))),
+                           max_new_tokens=2) for _ in range(6)]
+        stats = eng.run()
+        eng.pager.check_invariants(
+            eng.prefix_cache.block_refs() if eng.prefix_cache else None)
+        outcomes = [(eng.request(r).state, eng.request(r).finish_reason,
+                     tuple(eng.request(r).generated)) for r in rids]
+        return outcomes, inj.stats(), stats
+
+    out1, inj1, stats1 = run()
+    out2, inj2, _ = run()
+    assert all(state in TERMINAL_STATES for state, _, _ in out1)
+    assert out1 == out2 and inj1 == inj2
+    kernel_hits = sum(inj1["by_site"].get(s, 0) for s in
+                      ("kernel_compile", "kernel_oom", "kernel_nan"))
+    assert kernel_hits > 0, inj1
+    sub = guard.stats()
+    assert sub["injected_faults"] > 0
+    assert sub["parity_mismatches"] == 0
+    assert stats1["substrate"]["parity_mismatches"] == 0  # engine stats view

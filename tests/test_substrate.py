@@ -21,9 +21,9 @@ from repro.core.schedule import (
 )
 from repro.data.pipeline import DataConfig, MarkovTask, PrefetchIterator
 from repro.optim.compression import dequantize_int8, ef_compress, init_error_state, quantize_int8
+from repro.core.guard import KernelResourceError
 from repro.runtime.fault_tolerance import (
     StragglerMonitor,
-    elastic_mesh_shape,
     run_with_restarts,
 )
 
@@ -142,12 +142,22 @@ def test_straggler_monitor_flags_outliers():
     assert mon.record(0.1) is False
 
 
-@pytest.mark.parametrize(
-    "n", [1, 2, 3, 5, 7, 8, 12, 13, 31, 64, 100, 255, 256, 777, 1000, 4096])
-def test_elastic_mesh_shape_covers_devices(n):
-    data, model = elastic_mesh_shape(n)
-    assert data * model <= n
-    assert data * model >= n // 2  # never waste more than half
+def test_run_with_restarts_records_substrate_context():
+    """A SubstrateError escaping a step (strict mode / no twin) is retriable
+    AND its kernel context lands in the report — post-mortems can tell a
+    dying node from a bad kernel config (DESIGN.md §2.7)."""
+    calls = {"n": 0}
+
+    def loop():
+        calls["n"] += 1
+        if calls["n"] < 2:
+            raise KernelResourceError("vmem exhausted", kernel="row_gather",
+                                      machine="v5e", depth=8)
+
+    rep = run_with_restarts(loop, restore_fn=lambda: None, max_restarts=3)
+    assert rep.completed and rep.restarts == 1
+    assert "KernelResourceError[kernel=row_gather machine=v5e depth=8]" \
+        in rep.failures[0]
 
 
 # -------------------------------------------------------------- schedule
